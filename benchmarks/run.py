@@ -1,0 +1,249 @@
+"""Benchmark harness — one function per paper feature/figure + the
+framework-level roofline benches.
+
+The hlslib paper has no performance tables (it is an infrastructure
+paper); its "results" are the feature set of Fig. 1 and Listings 2-7.
+Each bench here therefore measures the TPU-adapted analogue of one
+listing, plus the training/serving benches the framework adds:
+
+    name,us_per_call,derived
+
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# --- paper Listing 4: dataflow emulation overhead -----------------------------------
+
+
+def bench_dataflow_emulation():
+    from repro.core.dataflow import run_cyclic_dataflow
+    N, T = 4096, 4
+    mem = list(range(N))
+    t0 = time.perf_counter()
+    run_cyclic_dataflow(mem, lambda v: v + 1, T=T, N=N, mode="software")
+    dt = (time.perf_counter() - t0) * 1e6
+    row("dataflow_cyclic_software", dt, f"elems_per_s={T * N / dt * 1e6:.0f}")
+    mem = list(range(N))
+    t0 = time.perf_counter()
+    run_cyclic_dataflow(mem, lambda v: v + 1, T=T, N=N, mode="sequential")
+    dt = (time.perf_counter() - t0) * 1e6
+    row("dataflow_cyclic_sequential", dt,
+        f"elems_per_s={T * N / dt * 1e6:.0f}")
+
+
+# --- paper §III-A: stream throughput -------------------------------------------------
+
+
+def bench_stream():
+    from repro.core.stream import Stream
+    import threading
+    n = 50_000
+    s = Stream(depth=64)
+
+    def produce():
+        for i in range(n):
+            s.Push(i)
+
+    t0 = time.perf_counter()
+    t = threading.Thread(target=produce)
+    t.start()
+    for _ in range(n):
+        s.Pop()
+    t.join()
+    dt = (time.perf_counter() - t0) * 1e6
+    row("stream_throughput", dt, f"items_per_s={n / dt * 1e6:.0f}")
+
+
+# --- paper Listing 5: DataPack pack/unpack -------------------------------------------
+
+
+def bench_datapack():
+    from repro.core.datapack import DataPack
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((256, 5000)),
+                    jnp.float32)
+    f = jax.jit(lambda x: DataPack.pack(x, 128).unpack())
+    us = timeit(lambda: f(x))
+    nbytes = x.size * 4 * 2
+    row("datapack_roundtrip", us, f"GBps={nbytes / us / 1e3:.1f}")
+
+
+# --- paper Listing 6: stencil via shift register -------------------------------------
+
+
+def bench_stencil():
+    from repro.kernels.stencil import stencil2d
+    from repro.kernels import ref
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((512, 1024)),
+                    jnp.float32)
+    f_ref = jax.jit(ref.stencil2d_ref)
+    us = timeit(lambda: f_ref(x))
+    row("stencil2d_xla", us, f"Mcells_per_s={x.size / us:.0f}")
+    us2 = timeit(lambda: stencil2d(x, interpret=True), iters=3, warmup=1)
+    row("stencil2d_pallas_interpret", us2, "correctness_path=interpret")
+
+
+# --- paper Listing 7: tree reduction --------------------------------------------------
+
+
+def bench_treereduce():
+    from repro.core.treereduce import tree_reduce, serial_reduce, Add
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((512, 4096)),
+                    jnp.float32)
+    ft = jax.jit(lambda x: tree_reduce(x, Add))
+    fs = jax.jit(lambda x: serial_reduce(x, Add, axis=-1))
+    us_t = timeit(lambda: ft(x))
+    us_s = timeit(lambda: fs(x))
+    row("treereduce_balanced", us_t, f"serial_us={us_s:.1f}")
+    exact = np.sum(np.asarray(x, np.float64), axis=-1)
+    err_t = float(np.abs(np.asarray(ft(x)) - exact).max())
+    err_s = float(np.abs(np.asarray(fs(x)) - exact).max())
+    row("treereduce_accuracy", 0.0,
+        f"tree_maxerr={err_t:.2e};serial_maxerr={err_s:.2e}")
+
+
+# --- kernels (correctness-path timing on CPU) ----------------------------------------
+
+
+def bench_attention():
+    from repro.models.layers import attention_xla
+    b, h, s, d = 1, 4, 1024, 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    fa = jax.jit(lambda q: attention_xla(q, q, q, causal=True, block_q=256,
+                                         block_k=256))
+    fskip = jax.jit(lambda q: attention_xla(q, q, q, causal=True,
+                                            block_q=256, block_k=256,
+                                            block_skip=True))
+    us = timeit(lambda: fa(q), iters=5)
+    us2 = timeit(lambda: fskip(q), iters=5)
+    flops = 4 * b * h * s * s * d
+    row("attention_blocked_full", us, f"GFLOPs={flops / us / 1e3:.1f}")
+    row("attention_blocked_skip", us2, f"speedup_vs_full={us / us2:.2f}x")
+
+
+def bench_ssd():
+    from repro.kernels import ref
+    s, h, dh, ds = 2048, 8, 64, 64
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((s, h, dh)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.5, (s, h)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 1.5, (h,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((s, ds)) * 0.5, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((s, ds)) * 0.5, jnp.float32)
+    fc = jax.jit(lambda *a: ref.ssd_chunked_ref(*a, chunk=64)[0])
+    fr = jax.jit(lambda *a: ref.ssd_recurrence_ref(*a)[0])
+    us_c = timeit(lambda: fc(x, dt, A, B, C), iters=5)
+    us_r = timeit(lambda: fr(x, dt, A, B, C), iters=5)
+    row("ssd_chunked_vs_recurrence", us_c,
+        f"recurrence_us={us_r:.1f};speedup={us_r / us_c:.1f}x")
+
+
+# --- framework level ------------------------------------------------------------------
+
+
+def bench_kv_quant():
+    from repro.kernels.kv_quant import kv_quantize, kv_dequantize
+    from repro.models.layers import _kv_quantize
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2048, 128)),
+                    jnp.bfloat16)
+    fx = jax.jit(_kv_quantize)
+    us = timeit(lambda: fx(x)[0])
+    nbytes = x.size * 2
+    row("kv_quant_xla", us, f"GBps={nbytes / us / 1e3:.1f}")
+    us2 = timeit(lambda: kv_quantize(x, interpret=True)[0], iters=3,
+                 warmup=1)
+    row("kv_quant_pallas_interpret", us2, "correctness_path=interpret")
+
+
+def bench_rmsnorm():
+    from repro.kernels.rmsnorm_kernel import rmsnorm as rk
+    from repro.models.layers import rmsnorm as rr
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4096, 512)),
+                    jnp.float32)
+    w = jnp.zeros(512, jnp.float32)
+    f = jax.jit(rr)
+    us = timeit(lambda: f(x, w))
+    row("rmsnorm_xla", us, f"GBps={x.size * 8 / us / 1e3:.1f}")
+    us2 = timeit(lambda: rk(x, w, interpret=True), iters=3, warmup=1)
+    row("rmsnorm_pallas_interpret", us2, "correctness_path=interpret")
+
+
+def bench_train_step():
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.train import train_loop as TL, optimizer as OPT, data as D
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    opt_state = OPT.init(params)
+    fn, _, _ = TL.make_train_step(cfg, TL.TrainCfg(), mesh=None,
+                                  donate=False)
+    batch = {k: jnp.asarray(v) for k, v in
+             D.make_batch(cfg, D.DataCfg(4, 64), 0).items()}
+    tokens = 4 * 64
+    us = timeit(lambda: fn(params, opt_state, batch)[2]["loss"], iters=5)
+    row("train_step_smoke", us, f"tokens_per_s={tokens / us * 1e6:.0f}")
+
+
+def bench_decode_step():
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.serve_loop import make_serve_steps
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    pre, dec, _, _ = make_serve_steps(cfg, batch=8, max_seq=128)
+    batch = registry.make_batch(cfg, "prefill", 8, 64)
+    logits, cache = pre(params, batch)
+    tok = registry.make_batch(cfg, "decode", 8, 64)
+    state = {"cache": cache}
+
+    def step():
+        logits, state["cache"] = dec(params, state["cache"], tok,
+                                     jnp.int32(64))
+        return logits
+
+    us = timeit(step, iters=10)
+    row("decode_step_smoke", us, f"tokens_per_s={8 / us * 1e6:.0f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_stream()
+    bench_dataflow_emulation()
+    bench_datapack()
+    bench_stencil()
+    bench_treereduce()
+    bench_attention()
+    bench_ssd()
+    bench_kv_quant()
+    bench_rmsnorm()
+    bench_train_step()
+    bench_decode_step()
+
+
+if __name__ == "__main__":
+    main()

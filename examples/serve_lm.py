@@ -1,0 +1,15 @@
+"""Batched serving example: continuous batching over tpulib Streams,
+with the producer/batcher/consumer trio run as dataflow PEs (paper
+Listing 4 applied to inference).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "minitron-4b", "--smoke", "--requests", "8",
+                "--slots", "4", "--prompt-len", "8", "--max-new", "12",
+                "--max-seq", "48"])

@@ -1,0 +1,23 @@
+"""End-to-end LM training example (~20M-param dense model, CPU-runnable).
+
+Run a few hundred steps with checkpointing; kill and rerun with --resume
+to see fault-tolerant restart:
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    argv = ["--arch", "minitron-4b", "--smoke", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "64", "--ckpt-dir", "/tmp/repro_ckpt",
+            "--ckpt-every", "25"]
+    if args.resume:
+        argv.append("--resume")
+    train_main(argv)

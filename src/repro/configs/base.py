@@ -1,0 +1,171 @@
+"""Model/run configuration — the F1 layer.
+
+Like hlslib's CMake integration, configuration is fully separated from
+source: every assigned architecture is a frozen ``ModelConfig`` in its
+own module, selectable by ``--arch <id>``; input shapes are ``ShapeCfg``
+entries.  Nothing in ``src/repro/models`` hard-codes an architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from ..core import datapack
+
+MODEL_AXIS = 16  # model-parallel shard count of the production mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int             # logical vocab (padding applied via DataPack)
+    head_dim: int = 128
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    rope_theta_global: float = 1e6     # gemma3 global layers
+    sliding_window: Optional[int] = None
+    local_global_pattern: int = 0      # N local layers per 1 global (gemma3)
+
+    # MLA (deepseek)
+    mla: bool = False
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+
+    # hybrid (zamba2): apply the single shared attention block after every
+    # ``shared_attn_every``-th mamba layer.
+    shared_attn_every: int = 0
+
+    # multimodal stubs
+    vision_patches: int = 0
+    vision_dim: int = 0
+    n_codebooks: int = 0
+    cross_attention: bool = False
+    cond_len: int = 0
+
+    mlp_gated: bool = True            # SwiGLU vs plain GELU MLP
+
+    # numerics / implementation
+    dtype: str = "bfloat16"
+    use_pallas: bool = False
+    remat: str = "dots"               # none | dots | full
+    attn_block_q: int = 512
+    attn_block_k: int = 512
+    attn_block_skip: bool = False     # beyond-paper: skip masked blocks
+    attn_head_constraints: bool = True  # explicit head sharding (divisible only)
+    fuse_qkv: bool = False            # beyond-paper: single QKV matmul
+    attn_p_bf16: bool = False         # beyond-paper: bf16 probs into PV matmul
+    moe_groups: int = 0               # beyond-paper: grouped dispatch (DPxEP)
+    decode_seq_shard: bool = False    # beyond-paper: shard decode KV over seq
+    kv_cache_dtype: str = "bfloat16"  # beyond-paper: "int8" quantized KV
+    embed_std: float = 0.02
+
+    # -- derived -----------------------------------------------------------------
+
+    @property
+    def padded_vocab(self) -> int:
+        return datapack.padded_vocab(self.vocab_size, MODEL_AXIS)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def group_layout(self) -> Tuple[int, int]:
+        """(n_groups, layers_per_group) for the scan-over-groups layout."""
+        if self.local_global_pattern:
+            per = self.local_global_pattern + 1
+            assert self.n_layers % per == 0
+            return self.n_layers // per, per
+        return self.n_layers, 1
+
+    def param_count_dense(self) -> int:
+        """Rough N for MODEL_FLOPS = 6·N·D bookkeeping (see roofline)."""
+        from ..models import registry
+        return registry.num_params(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str                    # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                    # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524_288, 1),
+}
+
+# Archs for which long_500k runs (sub-quadratic path exists); see DESIGN §7.
+LONG_CONTEXT_ARCHS = ("mamba2-1p3b", "zamba2-1p2b", "gemma3-12b")
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests: few layers, narrow
+    width, tiny vocab — per the assignment's smoke-test requirement."""
+    per = cfg.local_global_pattern + 1 if cfg.local_global_pattern else 1
+    n_layers = max(2 * per, cfg.shared_attn_every + 1
+                   if cfg.shared_attn_every else 0)
+    if cfg.shared_attn_every:
+        n_layers = 2 * cfg.shared_attn_every
+    kw = dict(
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads > 1 else 1,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        sliding_window=16 if cfg.sliding_window else None,
+        kv_lora_rank=32 if cfg.mla else 0,
+        qk_nope_dim=32 if cfg.mla else 0,
+        qk_rope_dim=16 if cfg.mla else 0,
+        v_head_dim=32 if cfg.mla else 0,
+        n_experts=4 if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        moe_d_ff=64 if cfg.moe_d_ff else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_headdim=16 if cfg.ssm_state else 64,
+        ssm_chunk=8 if cfg.ssm_state else 64,
+        vision_dim=64 if cfg.vision_dim else 0,
+        vision_patches=8 if cfg.vision_patches else 0,
+        cond_len=8 if cfg.cond_len else 0,
+        dtype="float32",
+        remat="none",
+    )
+    return dataclasses.replace(cfg, **kw)

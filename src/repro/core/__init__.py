@@ -1,0 +1,20 @@
+"""tpulib core — the hlslib feature set, TPU-native.
+
+F2 context.py    portable host runtime (Context/Program/Kernel/Buffer)
+F3 dataflow.py   multi-PE dataflow emulation (+ pipeline.py compiled mode)
+F4 stream.py     bounded thread-safe FIFO channels
+F5 datapack.py   typed wide data paths / tile geometry
+F6 shiftreg.py   shift registers with parallel taps
+F7 treereduce.py explicit balanced tree reduction (+ collectives.py mesh level)
+"""
+
+from .stream import Stream, UnboundedStream, StreamClosed, stream_all
+from .dataflow import DataflowContext, DataflowError, PE, run_cyclic_dataflow
+from .datapack import (DataPack, LANE, MXU, sublanes, round_up, pad_to_lanes,
+                       padded_vocab, padding_waste, assert_lane_aligned,
+                       block_shape_2d, fits_vmem)
+from .shiftreg import ShiftReg, shift_window, causal_conv_shiftreg, causal_conv_ref
+from .treereduce import (Add, Mul, Max, Min, LogSumExp, tree_reduce,
+                         serial_reduce, tree_reduce_fn)
+from .context import Context, Program, Kernel, Buffer, Access, MemoryBank
+from . import collectives, pipeline

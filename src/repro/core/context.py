@@ -1,0 +1,194 @@
+"""F2 — portable host runtime (paper §II-B, Listing 2).
+
+The paper: Intel and Xilinx adapted OpenCL to FPGAs differently (one
+command queue vs per-kernel queues; extended pointers vs memory flags for
+bank placement), so hlslib wraps both behind one API::
+
+    Context -> MakeProgram -> MakeKernel -> ExecuteTask
+            -> MakeBuffer(MemoryBank::bank0, ...) -> CopyToHost
+
+TPU adaptation: the "vendors" here are *execution environments* — a
+single CPU device, a TPU pod mesh, a multi-pod mesh, or 512 simulated
+host devices in the dry-run.  The same host program must run on all of
+them, with "memory bank" placement generalized to `NamedSharding`
+placement on a mesh.  ``Context`` hides:
+
+* mesh construction / device discovery,
+* jit + lower + compile caching (MakeProgram/MakeKernel ≈ the AOT path:
+  ``jax.jit(...).lower(...).compile()``),
+* buffer placement (``MakeBuffer`` = device_put with a sharding),
+* synchronous vs asynchronous execution (``ExecuteTask`` blocks —
+  matching the paper's Listing 2 — ``ExecuteAsync`` doesn't).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Access(enum.Enum):
+    """Buffer access mode (paper: ``Access::read`` / ``Access::write``)."""
+    read = "read"
+    write = "write"
+    read_write = "read_write"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryBank:
+    """FPGA DDR banks -> mesh partition specs.  ``MemoryBank.bank0`` etc.
+    are replicated placements (closest analogue of a single bank);
+    ``MemoryBank.sharded(...)`` places along mesh axes."""
+    spec: P
+
+    @classmethod
+    def sharded(cls, *axes) -> "MemoryBank":
+        return cls(P(*axes))
+
+    @classmethod
+    def replicated(cls) -> "MemoryBank":
+        return cls(P())
+
+
+# Named single-bank placements for API parity with the paper's Listing 2.
+MemoryBank.bank0 = MemoryBank.replicated()  # type: ignore[attr-defined]
+MemoryBank.bank1 = MemoryBank.replicated()  # type: ignore[attr-defined]
+
+
+class Buffer:
+    """A device-resident array with a placement (≈ cl::Buffer + bank)."""
+
+    def __init__(self, ctx: "Context", array: jax.Array, access: Access):
+        self.ctx = ctx
+        self.array = array
+        self.access = access
+
+    def CopyToHost(self, out: Optional[np.ndarray] = None) -> np.ndarray:
+        host = np.asarray(jax.device_get(self.array))
+        if out is not None:
+            np.copyto(out, host)
+            return out
+        return host
+
+    def CopyFromHost(self, src: np.ndarray) -> "Buffer":
+        if self.access == Access.read:
+            raise PermissionError("buffer is read-only for the device; "
+                                  "host rewrite not allowed")
+        self.array = jax.device_put(src, self.array.sharding)
+        return self
+
+    @property
+    def shape(self):
+        return self.array.shape
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+
+class Kernel:
+    """A compiled executable bound to arguments (≈ cl::Kernel).
+
+    ``MakeKernel`` AOT-compiles with the context's mesh and the bound
+    arguments' shapes/shardings — the TPU analogue of loading a bitstream
+    kernel.  ``ExecuteTask`` runs synchronously (block_until_ready),
+    matching the paper's synchronous semantics; ``ExecuteAsync`` returns
+    the un-awaited result (dispatch-and-continue).
+    """
+
+    def __init__(self, ctx: "Context", fn: Callable, args: Tuple[Any, ...],
+                 name: str, donate: Sequence[int] = ()):
+        self.ctx = ctx
+        self.name = name
+        self.args = args
+        jit_fn = jax.jit(fn, donate_argnums=tuple(donate))
+        concrete = [a.array if isinstance(a, Buffer) else a for a in args]
+        with ctx.use_mesh():
+            self.lowered = jit_fn.lower(*concrete)
+            self.compiled = self.lowered.compile()
+
+    def _concrete_args(self, override: Tuple[Any, ...] = ()):
+        args = override or self.args
+        return [a.array if isinstance(a, Buffer) else a for a in args]
+
+    def ExecuteTask(self, *override_args) -> Any:
+        out = self.compiled(*self._concrete_args(override_args))
+        return jax.block_until_ready(out)
+
+    def ExecuteAsync(self, *override_args) -> Any:
+        return self.compiled(*self._concrete_args(override_args))
+
+    # Introspection used by the roofline layer.
+    def cost_analysis(self) -> Dict[str, Any]:
+        return self.compiled.cost_analysis()
+
+    def memory_analysis(self):
+        return self.compiled.memory_analysis()
+
+    def hlo_text(self) -> str:
+        return self.compiled.as_text()
+
+
+class Program:
+    """A namespace of kernels (≈ the FPGA binary / .xclbin)."""
+
+    def __init__(self, ctx: "Context", fns: Dict[str, Callable]):
+        self.ctx = ctx
+        self.fns = dict(fns)
+
+    def MakeKernel(self, name: str, *args, donate: Sequence[int] = ()
+                   ) -> Kernel:
+        if name not in self.fns:
+            raise KeyError(f"no kernel named {name!r}; have {list(self.fns)}")
+        return Kernel(self.ctx, self.fns[name], args, name, donate)
+
+
+class Context:
+    """Sets up the runtime (paper: "Sets up the vendor OpenCL runtime").
+
+    One code path for every environment: pass an explicit mesh, or let it
+    build a 1-D mesh over whatever devices exist (a single CPU during
+    tests; 512 host devices in the dry-run; a real pod slice on TPU).
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 devices: Optional[Sequence[jax.Device]] = None):
+        if mesh is None:
+            devices = list(devices or jax.devices())
+            mesh = Mesh(np.array(devices), ("data",))
+        self.mesh = mesh
+
+    def use_mesh(self):
+        return jax.sharding.set_mesh(self.mesh)
+
+    def sharding(self, bank: MemoryBank) -> NamedSharding:
+        return NamedSharding(self.mesh, bank.spec)
+
+    # -- paper Listing 2 API -------------------------------------------------------
+
+    def MakeProgram(self, fns: Dict[str, Callable] | Callable) -> Program:
+        if callable(fns):
+            fns = {getattr(fns, "__name__", "kernel"): fns}
+        return Program(self, fns)
+
+    def MakeBuffer(self, dtype, access: Access, bank: MemoryBank,
+                   *shape_or_data) -> Buffer:
+        """``MakeBuffer<float, Access::read>(bank, begin, end)`` or
+        ``MakeBuffer<float, Access::write>(bank, N[, M, ...])``."""
+        sharding = self.sharding(bank)
+        if len(shape_or_data) == 1 and isinstance(
+                shape_or_data[0], (np.ndarray, jnp.ndarray, list)):
+            data = jnp.asarray(shape_or_data[0], dtype=dtype)
+        elif all(isinstance(s, (int, np.integer)) for s in shape_or_data):
+            data = jnp.zeros(tuple(int(s) for s in shape_or_data), dtype=dtype)
+        else:
+            raise TypeError(f"MakeBuffer: pass data or a shape, got "
+                            f"{shape_or_data}")
+        return Buffer(self, jax.device_put(data, sharding), access)

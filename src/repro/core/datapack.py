@@ -1,0 +1,187 @@
+"""F5 — DataPack: typed wide data paths, adapted to TPU tile geometry.
+
+The paper (§III-B): HLS needs explicitly wide buses to exploit memory
+bandwidth and vectorize compute, but ``ap_uint`` is untyped and OpenCL
+vector types are limited.  ``hlslib::DataPack<T, W>`` is a *typed* W-wide
+vector with native indexing, element-wise ops, and conversions; using it
+consistently means one centrally-defined width constant resizes every
+register, bus, buffer and interface in the design.
+
+TPU adaptation: the TPU analogue of "bus width" is **tile geometry** —
+the VPU operates on (8 sublanes × 128 lanes) vector registers, the MXU on
+128×128 systolic tiles, and VMEM tiling (Pallas BlockSpecs) wants the
+trailing dim a multiple of LANE=128 and the second-to-last a multiple of
+the dtype-dependent sublane count.  ``DataPack`` here is:
+
+* a set of authoritative constants (``LANE``, ``sublanes(dtype)``),
+* ``pad_to_lanes`` / ``round_up`` — the "change one typedef" lever used by
+  every config for vocab/ff/head padding,
+* a ``DataPack`` pytree wrapper that packs a logical last axis into
+  (groups, W) with W lane-aligned, exposing typed indexing and
+  element-wise arithmetic like the C++ class,
+* shape helpers Pallas kernels use to derive BlockSpecs from one width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- authoritative TPU tile constants (one place — the "central typedef") ----
+
+LANE = 128          # lanes per vector register / MXU edge
+MXU = 128           # systolic array edge (bf16)
+_SUBLANES = {4: 8, 2: 16, 1: 32}   # bytes-per-element -> sublane count
+
+
+def sublanes(dtype) -> int:
+    """Sublane count of a (8·(32/bitwidth))×128 native tile for ``dtype``."""
+    itemsize = jnp.dtype(dtype).itemsize
+    try:
+        return _SUBLANES[itemsize]
+    except KeyError:
+        raise ValueError(f"unsupported dtype for TPU tiling: {dtype}")
+
+
+def round_up(x: int, multiple: int) -> int:
+    if multiple <= 0:
+        raise ValueError("multiple must be positive")
+    return -(-x // multiple) * multiple
+
+
+def pad_to_lanes(x: int, lanes: int = LANE) -> int:
+    """Pad a logical dimension up to lane alignment."""
+    return round_up(x, lanes)
+
+
+def padded_vocab(vocab: int, model_shards: int = 16, lanes: int = LANE) -> int:
+    """Vocab padding rule used by every config: divisible by the model-axis
+    shard count *and* lane-aligned per shard, so the embedding/logit matmul
+    shards without GSPMD fixups."""
+    return round_up(vocab, model_shards * lanes)
+
+
+def padding_waste(logical: int, padded: int) -> float:
+    """Fraction of FLOPs/bytes wasted by padding (reported in roofline)."""
+    return (padded - logical) / padded if padded else 0.0
+
+
+def assert_lane_aligned(*dims: int, what: str = "dim") -> None:
+    """Compile-time-style check (the DataPack bus-width enforcement)."""
+    for d in dims:
+        if d % LANE != 0:
+            raise ValueError(
+                f"{what}={d} is not lane-aligned (multiple of {LANE}); "
+                f"pad with datapack.pad_to_lanes")
+
+
+# --- the typed pack itself -----------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DataPack:
+    """A typed W-wide pack over the trailing axis of ``data``.
+
+    ``data`` has shape (..., groups, W) with ``W`` lane-aligned.  Mirrors
+    ``hlslib::DataPack``: native indexing (``pack[i]``), element-wise
+    arithmetic with packs and scalars, and conversion to/from flat arrays
+    (the C-array / ap_uint conversions in the paper).
+    """
+
+    data: jnp.ndarray
+    logical: int          # logical (unpadded) trailing size
+
+    # -- construction -----------------------------------------------------------
+
+    @classmethod
+    def pack(cls, x: jnp.ndarray, width: int = LANE) -> "DataPack":
+        if width % LANE != 0:
+            raise ValueError(f"DataPack width {width} must be a multiple of "
+                             f"LANE={LANE} on TPU")
+        logical = x.shape[-1]
+        padded = round_up(logical, width)
+        if padded != logical:
+            pad = [(0, 0)] * (x.ndim - 1) + [(0, padded - logical)]
+            x = jnp.pad(x, pad)
+        new_shape = x.shape[:-1] + (padded // width, width)
+        return cls(data=x.reshape(new_shape), logical=logical)
+
+    def unpack(self) -> jnp.ndarray:
+        flat = self.data.reshape(self.data.shape[:-2] + (-1,))
+        return flat[..., : self.logical]
+
+    # -- typed indexing (paper: "native indexing of elements") -------------------
+
+    @property
+    def width(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def groups(self) -> int:
+        return self.data.shape[-2]
+
+    def __getitem__(self, i) -> jnp.ndarray:
+        return self.data[..., i, :]
+
+    def set(self, i, value) -> "DataPack":
+        return DataPack(self.data.at[..., i, :].set(value), self.logical)
+
+    # -- element-wise ops (paper Listing 5) --------------------------------------
+
+    def _binop(self, other, op) -> "DataPack":
+        if isinstance(other, DataPack):
+            if other.width != self.width:
+                raise ValueError("DataPack width mismatch: "
+                                 f"{self.width} vs {other.width}")
+            other = other.data
+        return DataPack(op(self.data, other), self.logical)
+
+    def __add__(self, o): return self._binop(o, jnp.add)
+    def __radd__(self, o): return self._binop(o, jnp.add)
+    def __sub__(self, o): return self._binop(o, jnp.subtract)
+    def __mul__(self, o): return self._binop(o, jnp.multiply)
+    def __rmul__(self, o): return self._binop(o, jnp.multiply)
+    def __truediv__(self, o): return self._binop(o, jnp.divide)
+
+    # -- pytree ------------------------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.data,), self.logical
+
+    @classmethod
+    def tree_unflatten(cls, logical, children):
+        return cls(children[0], logical)
+
+
+# --- BlockSpec helpers: one width constant -> kernel tiling -----------------------
+
+
+def block_shape_2d(rows: int, cols: int, dtype=jnp.float32,
+                   max_rows: int = 512) -> Tuple[int, int]:
+    """Derive a VMEM-friendly (rows, cols) block: rows a sublane multiple
+    capped at ``max_rows``, cols lane-aligned.  Kernels derive their
+    BlockSpecs from this so a single width change re-tiles the design."""
+    sl = sublanes(dtype)
+    r = min(round_up(min(rows, max_rows), sl), round_up(rows, sl))
+    c = min(round_up(cols, LANE), round_up(cols, LANE))
+    return r, c
+
+
+def vmem_bytes(shape: Sequence[int], dtype) -> int:
+    return int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+
+
+def fits_vmem(*block_specs: Tuple[Sequence[int], Any],
+              budget_bytes: int = 16 * 2 ** 20, double_buffered: bool = True
+              ) -> bool:
+    """Check a set of (shape, dtype) blocks against the ~16 MiB VMEM budget
+    (×2 for the Pallas pipeline's double buffering)."""
+    total = sum(vmem_bytes(s, d) for s, d in block_specs)
+    if double_buffered:
+        total *= 2
+    return total <= budget_bytes

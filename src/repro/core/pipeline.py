@@ -1,0 +1,140 @@
+"""F3 compiled mode — the dataflow graph lowered to a real pipeline.
+
+The software emulator (``repro.core.dataflow``) runs PEs as threads.  On
+hardware, hlslib's DATAFLOW region is *inlined* and the HLS tool overlaps
+the PEs.  The TPU analogue of that inlining is a **pipeline-parallel
+schedule**: each PE becomes a stage owned by a mesh-axis slice, stream
+edges become ``ppermute`` hops, and stream *depth* becomes the number of
+microbatches in flight.
+
+Two lowerings are provided:
+
+* ``fused_pipeline``   — single-device ``lax.scan`` over microbatches with
+  all stages composed (what XLA overlaps via its own pipelining); the
+  semantic reference.
+* ``gpipe_pipeline``   — shard_map over a ``stage`` axis, GPipe schedule:
+  ``num_micro + num_stages - 1`` scan steps, each step computing every
+  stage on its in-flight microbatch and ``ppermute``-ing activations to
+  the next stage.  Bubble fraction = (S-1)/(M+S-1), reported by
+  ``pipeline_efficiency`` so perf work can size microbatch counts.
+
+Both consume the same per-stage function list, so tests can assert the
+pipeline computes exactly what sequential composition computes — the
+compiled-world version of the paper's "software must match hardware".
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fused_pipeline(stage_fns: Sequence[Callable], xs: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Reference composition: scan microbatches through all stages."""
+
+    def step(_, x):
+        for f in stage_fns:
+            x = f(x)
+        return None, x
+
+    _, ys = lax.scan(step, None, xs)
+    return ys
+
+
+def pipeline_efficiency(num_micro: int, num_stages: int) -> float:
+    """GPipe utilization = M / (M + S - 1)."""
+    return num_micro / (num_micro + num_stages - 1)
+
+
+def gpipe_pipeline(stage_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+                   stage_params: Any, xs: jnp.ndarray, mesh: Mesh,
+                   axis: str = "stage") -> jnp.ndarray:
+    """GPipe schedule over a mesh axis.
+
+    ``stage_fn(params_slice, x) -> x`` is one PE; ``stage_params`` has a
+    leading stage axis (sharded over ``axis``); ``xs`` is
+    (num_micro, micro_batch, ...) — replicated in, replicated out.
+
+    Inside shard_map each rank loops ``num_micro + S - 1`` ticks: on tick
+    ``t`` stage ``s`` processes microbatch ``t - s`` (when in range), then
+    activations hop ``s -> s+1`` via ppermute.  Stream depth 1 ≡ one
+    activation in flight per edge, exactly the bounded-FIFO semantics of
+    the emulator.
+    """
+    S = mesh.shape[axis]
+    M, mb = xs.shape[0], xs.shape[1:]
+
+    def ranked(params, xs_local):
+        s = lax.axis_index(axis)
+        params = jax.tree.map(lambda p: p[0], params)  # this rank's slice
+        n_ticks = M + S - 1
+        perm_fwd = [(i, i + 1) for i in range(S - 1)]
+
+        def tick(carry, t):
+            inflight, outputs = carry
+            # Stage input: stage 0 injects microbatch t; others use the
+            # activation that arrived over the stream edge.
+            mb_idx = jnp.clip(t, 0, M - 1)
+            injected = jnp.where(s == 0, 1, 0)
+            x_in = jnp.where(injected, xs_local[mb_idx], inflight)
+            active = (t - s >= 0) & (t - s < M)
+            y = stage_fn(params, x_in)
+            y = jnp.where(active, y, inflight)
+            # Last stage commits its finished microbatch t - (S-1).
+            out_idx = jnp.clip(t - (S - 1), 0, M - 1)
+            commit = (s == S - 1) & active
+            outputs = jnp.where(
+                commit,
+                outputs.at[out_idx].set(y),
+                outputs)
+            # Stream hop to the next stage (depth-1 FIFO edge).
+            y_next = lax.ppermute(y, axis, perm_fwd)
+            return (y_next, outputs), None
+
+        init_inflight = jnp.zeros(mb, xs_local.dtype)
+        init_out = jnp.zeros((M,) + mb, xs_local.dtype)
+        # Walk ticks with stage-local time t_s = global_tick - 0 (stage
+        # offset handled by the `active` window above).
+        (_, outputs), _ = lax.scan(tick, (init_inflight, init_out),
+                                   jnp.arange(n_ticks))
+        # Only the last stage holds real outputs; broadcast them back
+        # (mask-and-psum — ppermute cannot fan out one source to all).
+        outputs = lax.psum(jnp.where(s == S - 1, outputs, 0), axis)
+        return outputs
+
+    shard = jax.shard_map(
+        ranked, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False)
+    return shard(stage_params, xs)
+
+
+def gpipe_train_step(stage_fn: Callable, loss_fn: Callable,
+                     stage_params: Any, xs: jnp.ndarray,
+                     targets: jnp.ndarray, mesh: Mesh,
+                     axis: str = "stage"):
+    """Pipeline-parallel training via autodiff THROUGH the GPipe schedule.
+
+    ``jax.grad`` transposes every ``ppermute`` edge into its reverse hop,
+    so the backward pass is automatically the mirrored pipeline — the
+    compiled analogue of running the dataflow graph backwards.  Memory
+    is O(num_micro) stashed activations per stage (classic GPipe); a
+    1F1B reordering is a scheduling refinement on top of the same edges.
+
+    Returns (loss, grads) with grads matching ``stage_params``.
+    """
+
+    def loss_of(params):
+        ys = gpipe_pipeline(stage_fn, params, xs, mesh, axis=axis)
+        return loss_fn(ys, targets)
+
+    return jax.value_and_grad(loss_of)(stage_params)

@@ -1,0 +1,124 @@
+"""F6 — shift registers with parallel access (paper §III-C).
+
+The paper: FPGA codes buffer streamed elements for a *constant* number of
+cycles (sliding windows for stencils); Intel OpenCL infers the pattern,
+Vivado does not — so hlslib provides an *explicit* templated shift
+register whose taps are compile-time constants, checked ascending, with
+buffers between taps sized from consecutive-tap distances.
+
+TPU adaptation: there is no free-running register chain, but the pattern
+— "element pushed now is consumed again at fixed future offsets" — is
+exactly (a) the rolling KV buffer of **sliding-window attention**
+(gemma3's 5:1 local layers), (b) the depthwise **causal conv** in Mamba2
+(a 4-tap shift register over time), and (c) **stencil** halos.  We provide:
+
+* ``ShiftReg`` — an eager, stateful shift register for the dataflow
+  *software-emulation* world (hlslib-faithful: single input, parallel
+  static taps, ascending-offset check at construction).
+* ``shift_window`` / ``causal_conv_shiftreg`` — pure-jnp formulations that
+  compiled code (and the Pallas stencil kernel) use: a scan whose carry is
+  the register contents, i.e. the hardware shift register made explicit.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ShiftReg:
+    """Explicit shift register with parallel taps (software-emulation side).
+
+    ``taps`` are constant offsets (0 = most recently pushed after Shift),
+    must be strictly ascending — mirroring hlslib's variadic-template
+    constraint that buffer sizes between consecutive taps be well defined.
+    ``size`` is the total delay (the largest reachable offset + 1).
+    """
+
+    def __init__(self, size: int, taps: Sequence[int], fill=0):
+        taps = list(taps)
+        if any(t < 0 or t >= size for t in taps):
+            raise ValueError(f"taps {taps} out of range for size {size}")
+        if taps != sorted(set(taps)):
+            raise ValueError(
+                f"taps must be strictly ascending (got {taps}) — "
+                "consecutive-tap distances define the internal buffers")
+        self.size = size
+        self.taps = taps
+        # Distances between consecutive taps = the per-segment buffer sizes
+        # the hardware implementation would instantiate (paper §III-C).
+        bounds = taps + [size]
+        self.segment_sizes = [b - a for a, b in zip(bounds[:-1], bounds[1:])]
+        self._buf: List[Any] = [fill] * size
+
+    def Shift(self, value) -> None:
+        """Push one element; the oldest falls off the end."""
+        self._buf.insert(0, value)
+        self._buf.pop()
+
+    def Get(self, tap: int):
+        """Read a tap — only *declared* taps are readable (the compile-time
+        constant-offset enforcement from the paper)."""
+        if tap not in self.taps:
+            raise KeyError(f"tap {tap} was not declared (taps={self.taps})")
+        return self._buf[tap]
+
+    def __getitem__(self, tap: int):
+        return self.Get(tap)
+
+
+# --- compiled-world formulations -------------------------------------------------
+
+
+def shift_window(x: jnp.ndarray, window: int, fill=0.0) -> jnp.ndarray:
+    """All ``window`` taps of a shift register over axis 0, vectorized.
+
+    Returns ``y[t, k] = x[t - k]`` (zero/fill before start): shape
+    ``(T, window) + x.shape[1:]``.  This is the dense unrolling of the
+    register — what the Pallas stencil kernel tiles into VMEM.
+    """
+    T = x.shape[0]
+    pads = [(window - 1, 0)] + [(0, 0)] * (x.ndim - 1)
+    xp = jnp.pad(x, pads, constant_values=fill)
+    idx = jnp.arange(T)[:, None] + (window - 1 - jnp.arange(window))[None, :]
+    return xp[idx]  # (T, window, ...)
+
+
+def causal_conv_shiftreg(x: jnp.ndarray, kernel: jnp.ndarray,
+                         state: jnp.ndarray | None = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time as an explicit shift register scan.
+
+    ``x``: (T, C), ``kernel``: (K, C).  The scan carry *is* the register
+    contents (K-1, C) — the hardware structure made explicit, faithful to
+    the paper's "buffer elements streamed in for a constant number of
+    cycles".  Returns (y (T, C), final_state (K-1, C)).  ``state`` seeds
+    the register (used by decode: one step at a time).
+    """
+    K, C = kernel.shape
+    if state is None:
+        state = jnp.zeros((K - 1, C), dtype=x.dtype)
+
+    def step(reg, xt):
+        window = jnp.concatenate([reg, xt[None]], axis=0)      # (K, C)
+        yt = jnp.sum(window * kernel, axis=0)                  # all taps
+        return window[1:], yt
+
+    final, y = jax.lax.scan(step, state, x)
+    return y, final
+
+
+def causal_conv_ref(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: same depthwise causal conv via explicit padding + windowing."""
+    K, C = kernel.shape
+    taps = shift_window(x, K)              # (T, K, C), taps[t,k] = x[t-k]
+    # kernel[k] multiplies x[t - (K-1-k)] in the scan formulation.
+    return jnp.einsum("tkc,kc->tc", taps[:, ::-1, :], kernel)
+
+
+def sliding_window_indices(t: int, window: int) -> np.ndarray:
+    """Static tap index set for a sliding attention window ending at ``t``."""
+    return np.arange(max(0, t - window + 1), t + 1)

@@ -1,0 +1,132 @@
+"""F7 — TreeReduce with functors (paper §III-D).
+
+The paper: fully-pipelined reduction of an array under an associative
+operator should be a *balanced binary tree* (minimal latency/resources),
+but imperative accumulation loops rely on the compiler noticing — and on
+permission to reorder non-associative FP ops.  hlslib's ``TreeReduce``
+instantiates the tree explicitly via variadic templates, for any type,
+size, and binary operator expressed as a functor (``Apply`` + identity).
+
+TPU adaptation: XLA's ``reduce`` makes no ordering promise either (and a
+``for``-loop accumulation builds a serial dependence chain of depth N
+that the VPU cannot pipeline).  We provide the same explicit guarantee:
+
+* functor classes with ``apply`` + ``identity`` (Add/Max/Min/Mul/
+  LogSumExp and user-defined),
+* ``tree_reduce`` — explicitly balanced pairwise tree over a static axis
+  length (depth ⌈log2 N⌉, bit-exact reproducible grouping independent of
+  backend),
+* used at three levels: inside Pallas kernels (lane reduction), in model
+  code (stable logsumexp / top-k margins), and — the distributed analogue
+  — ``repro.core.collectives.tree_all_reduce`` over mesh axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+
+class Functor(Protocol):
+    identity: Any
+    @staticmethod
+    def apply(a, b): ...
+
+
+class Add:
+    identity = 0.0
+    @staticmethod
+    def apply(a, b):
+        return a + b
+
+
+class Mul:
+    identity = 1.0
+    @staticmethod
+    def apply(a, b):
+        return a * b
+
+
+class Max:
+    identity = -jnp.inf
+    @staticmethod
+    def apply(a, b):
+        return jnp.maximum(a, b)
+
+
+class Min:
+    identity = jnp.inf
+    @staticmethod
+    def apply(a, b):
+        return jnp.minimum(a, b)
+
+
+class LogSumExp:
+    """Numerically-stable streaming logsumexp combiner — the functor the
+    online-softmax attention kernel uses to merge per-block partials."""
+    identity = -jnp.inf
+    @staticmethod
+    def apply(a, b):
+        m = jnp.maximum(a, b)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        return m_safe + jnp.log(
+            jnp.exp(a - m_safe) + jnp.exp(b - m_safe))
+
+
+def tree_reduce(x: jnp.ndarray, op: type[Functor] = Add, axis: int = -1
+                ) -> jnp.ndarray:
+    """Explicitly balanced binary tree reduction along ``axis``.
+
+    Guarantees: grouping is the balanced tree over the (identity-padded)
+    power-of-two length — depth ⌈log2 N⌉, identical combination order on
+    every backend, no reliance on compiler reassociation.  Matches
+    ``hlslib::TreeReduce<T, Op, N>``.
+    """
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n == 0:
+        raise ValueError("cannot tree-reduce an empty axis")
+    # Pad to a power of two with the operator identity (the tree stays
+    # balanced; identity legs are no-ops).
+    p = 1 << (n - 1).bit_length()
+    if p != n:
+        pad_width = [(0, 0)] * (x.ndim - 1) + [(0, p - n)]
+        x = jnp.pad(x, pad_width, constant_values=op.identity)
+    while x.shape[-1] > 1:
+        half = x.shape[-1] // 2
+        x = op.apply(x[..., :half], x[..., half:])
+    return x[..., 0]
+
+
+def serial_reduce(x: jnp.ndarray, op: type[Functor] = Add, axis: int = -1
+                  ) -> jnp.ndarray:
+    """Left-to-right fold — the accumulation-loop baseline the paper warns
+    about.  Kept for tests/benchmarks contrasting accuracy & HLO depth."""
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, 0)
+
+    def body(acc, xi):
+        return op.apply(acc, xi), None
+
+    init = jnp.full(x.shape[1:], op.identity, dtype=x.dtype)
+    acc, _ = jax.lax.scan(body, init, x)
+    return acc
+
+
+def tree_reduce_fn(xs: list, op: type[Functor] = Add):
+    """Tree-reduce a Python list of arrays/pytrees (used by gradient
+    accumulation and the mesh-level collective schedule)."""
+    if not xs:
+        raise ValueError("empty list")
+    layer = list(xs)
+    while len(layer) > 1:
+        nxt = []
+        for i in range(0, len(layer) - 1, 2):
+            nxt.append(jax.tree.map(op.apply, layer[i], layer[i + 1]))
+        if len(layer) % 2:
+            nxt.append(layer[-1])
+        layer = nxt
+    return layer[0]

@@ -1,0 +1,2 @@
+from .sharding import (axis_rules, constrain, spec_for, current_mesh,
+                       use_rules, zero_shard_spec, DEFAULT_RULES)

@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules (the F1 "configuration over source edits"
+principle applied to distribution).
+
+Model code names *logical* axes ("batch", "heads", "ff", ...); the
+launcher installs a rule table mapping logical axes to mesh axes.  The
+same model definition then runs on a single CPU device (no mesh — all
+constraints become no-ops), a 16×16 pod, or a 2×16×16 multi-pod, without
+touching model source — hlslib's portability story for distribution.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# batch over all data-parallel axes; model-parallel dims over "model".
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,           # sequence replicated by default ...
+    "seq_sharded": ("data",),  # ... except SP mode (long-context)
+    "embed": None,
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "expert_cap": None,
+    "moe_groups": ("pod", "data"),
+    "kv_seq": ("model",),
+    "d_inner": ("model",),
+    "ssm_heads": ("model",),
+    "state": None,
+    "layers": None,
+    "stack": None,
+    "conv": None,
+    "lora": None,
+    "cond": None,
+    "patches": None,
+    "codebooks": None,
+}
+
+_rules_var: contextvars.ContextVar[Rules] = contextvars.ContextVar(
+    "axis_rules", default=DEFAULT_RULES)
+
+
+def axis_rules() -> Rules:
+    return _rules_var.get()
+
+
+@contextlib.contextmanager
+def use_rules(overrides: Optional[Rules] = None, **kw):
+    rules = dict(_rules_var.get())
+    rules.update(overrides or {})
+    rules.update(kw)
+    token = _rules_var.set(rules)
+    try:
+        yield rules
+    finally:
+        _rules_var.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             dims: Optional[Sequence[int]] = None) -> P:
+    """Logical axes -> PartitionSpec, filtered to axes the mesh has.
+
+    With ``dims`` (the tensor shape), a mesh axis that does not divide
+    its dimension is skipped *without being consumed*, so a later
+    logical axis can claim it (e.g. 40 kv heads can't take 'model', so
+    the kv_seq dim gets it instead)."""
+    mesh = mesh if mesh is not None else current_mesh()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    rules = axis_rules()
+    parts = []
+    used = set()
+    for i, ax in enumerate(axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        target = rules.get(ax, None)
+        if target is None:
+            parts.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        avail = []
+        for t in target:
+            if t not in mesh_axes or t in used:
+                continue
+            if dims is not None and mesh is not None:
+                prod = mesh.shape[t]
+                for a in avail:
+                    prod *= mesh.shape[a]
+                if dims[i] % prod != 0:
+                    continue
+            avail.append(t)
+        used.update(avail)
+        avail = tuple(avail)
+        parts.append(avail if len(avail) > 1 else (avail[0] if avail else None))
+    return P(*parts)
+
+
+def constrain(x, *axes: Optional[str]):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_for(axes, mesh))
+
+
+def zero_shard_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+                    axis: str = "data") -> P:
+    """ZeRO-1: additionally shard the first large, still-replicated dim of
+    an optimizer-state tensor over the data axis (if divisible)."""
+    if axis not in mesh.axis_names:
+        return spec
+    n = mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, d) in enumerate(zip(parts, shape)):
+        if p is None and d % n == 0 and d >= n:
+            parts[i] = axis
+            return P(*parts)
+    return spec

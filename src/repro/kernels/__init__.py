@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+flash_attention.py  tiled online-softmax attention (causal/sliding-window/GQA)
+ssd_scan.py         Mamba2 SSD chunked scan (MXU matmul form)
+stencil.py          2D 4-point stencil via the shift-register pattern
+treereduce_kernel.py lane-level balanced tree reduction
+ops.py              jit'd wrappers with XLA fallbacks
+ref.py              pure-jnp oracles
+"""
+from . import ops, ref

@@ -1,0 +1,166 @@
+"""Tiled online-softmax (flash) attention for TPU.
+
+TPU-native design (hardware-adaptation notes):
+
+* Grid = (batch·q_heads, q_blocks, kv_blocks) with the kv dim innermost —
+  TPU grids execute sequentially, so the kv loop carries the online-
+  softmax state (m, l, acc) in VMEM scratch across grid steps.  This is
+  the Pallas idiom for FlashAttention-style accumulation (no atomics, no
+  shared-memory reductions as on GPU — the sequential grid IS the loop).
+* BlockSpecs tile (block_q × head_dim) / (block_k × head_dim) into VMEM;
+  block sizes are lane/sublane aligned via ``repro.core.datapack`` (F5 —
+  one width constant re-tiles the kernel).
+* The online-softmax merge of per-block partials is the ``LogSumExp``
+  functor of F7 (``repro.core.treereduce``) in streaming form.
+* Causal/sliding-window blocks that are fully masked are skipped with
+  ``pl.when`` — the block-level analogue of hlslib's compile-time-checked
+  constant taps: the window (F6) is static, so skipping is static too.
+
+GQA is supported by index-mapping kv blocks with head // group.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import datapack
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, kv_len: int, q_offset: int):
+    jq = pl.program_id(1)
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Static-ish activity test: with equal block sizes, block (jq, jk) can
+    # contribute iff kv block start <= last query position, and (window)
+    # kv block end > first query position - window.
+    q_start = jq * block_q + q_offset           # absolute position of row 0
+    q_last = q_start + block_q - 1
+    k_start = jk * block_k
+    k_last = k_start + block_k - 1
+    active = jnp.bool_(True)
+    if causal:
+        active &= k_start <= q_last
+    if window is not None:
+        active &= k_last > q_start - window
+
+    @pl.when(active)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard fully-masked rows (all NEG_INF): keep exp() finite.
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                   # rescale old partials
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows -> 0
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (b, hq, sq, d); k, v: (b, hkv, sk, d).  Returns (b, hq, sq, d).
+
+    Decode-style calls (sq < sk) align queries to the end of the kv
+    sequence, matching ``ref.attention_ref``.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sq_pad = datapack.round_up(sq, block_q)
+    sk_pad = datapack.round_up(sk, block_k)
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+
+    bh = b * hq
+    q4 = q.reshape(bh, sq_pad, d)
+    k4 = k.reshape(b * hkv, sk_pad, d)
+    v4 = v.reshape(b * hkv, sk_pad, d)
+    grid = (bh, sq_pad // block_q, sk_pad // block_k)
+
+    q_offset = sk - sq  # decode alignment
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=sk, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda i, j, kk, g=group, hh=hq: (
+                             (i // hh) * (hh // g) + (i % hh) // g, kk, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda i, j, kk, g=group, hh=hq: (
+                             (i // hh) * (hh // g) + (i % hh) // g, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k4, v4)
+
+    out = out.reshape(b, hq, sq_pad, d)
+    return out[:, :, :sq, :]

@@ -1,0 +1,81 @@
+"""Public jit'd wrappers over the Pallas kernels with XLA fallbacks.
+
+The framework calls these; ``use_pallas`` selects the Mosaic kernel
+(TPU, or interpret=True on CPU for tests) vs the pure-XLA reference path
+(what the 512-device dry-run lowers — Mosaic cannot lower on CPU host
+devices, and the XLA path's HLO is the roofline input; see DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+from .stencil import stencil2d
+from .treereduce_kernel import tree_row_reduce
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                   "interpret", "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              use_pallas: bool = False, interpret: bool = True,
+              block_q: int = 128, block_k: int = 128):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 64, use_pallas: bool = False,
+        interpret: bool = True):
+    """Batched SSD: x (b,s,h,dh), dt (b,s,h), A (h,), B/C (b,s,ds)."""
+    if use_pallas:
+        return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    y, _ = jax.vmap(
+        lambda xx, dd, bb, cc: ref.ssd_chunked_ref(xx, dd, A, bb, cc,
+                                                   chunk=chunk),
+        in_axes=(0, 0, 0, 0))(x, dt, B, C)
+    return y
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_rows"))
+def stencil(x, *, use_pallas: bool = False, interpret: bool = True,
+            block_rows: int = 128):
+    if use_pallas:
+        return stencil2d(x, block_rows=block_rows, interpret=interpret)
+    return ref.stencil2d_ref(x)
+
+
+@partial(jax.jit, static_argnames=("op", "use_pallas", "interpret"))
+def row_reduce(x, *, op: str = "add", use_pallas: bool = False,
+               interpret: bool = True):
+    if use_pallas:
+        return tree_row_reduce(x, op=op, interpret=interpret)
+    return ref.rowreduce_ref(x, op=op)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def kv_quant(x, *, use_pallas: bool = False, interpret: bool = True):
+    """Row-wise int8 KV quantization: (rows, d) -> (int8, bf16 scales)."""
+    if use_pallas:
+        from .kv_quant import kv_quantize
+        return kv_quantize(x, interpret=interpret)
+    from ..models.layers import _kv_quantize
+    return _kv_quantize(x)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def fused_rmsnorm(x, w, *, use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        from .rmsnorm_kernel import rmsnorm
+        return rmsnorm(x, w, interpret=interpret)
+    from ..models.layers import rmsnorm as rms_ref
+    return rms_ref(x, w)

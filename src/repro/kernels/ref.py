@@ -1,0 +1,173 @@
+"""Pure-jnp oracles for every Pallas kernel (the hlslib "software
+emulation" side: the behavioral reference the hardware must match).
+
+Every function here is deliberately naive-but-obviously-correct; tests
+sweep shapes/dtypes and assert the Pallas kernels (interpret=True) match
+these to numerical tolerance.  Model code reuses the *chunked* SSD and
+attention refs as its XLA path (what the dry-run lowers).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- attention -----------------------------------------------------------------
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """GQA attention oracle.
+
+    q: (b, hq, sq, d);  k, v: (b, hkv, sk, d) with hq % hkv == 0.
+    ``window``: sliding-window width (the shift-register pattern — query i
+    attends keys (i-window, i]); None = full.  Computed in fp32.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # Broadcast kv heads to q heads.
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    sk = k.shape[2]
+    # Align query positions to the *end* of the kv sequence (decode case:
+    # sq new queries attending a length-sk cache).
+    qpos = jnp.arange(sq) + (sk - sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# --- Mamba2 SSD ------------------------------------------------------------------
+
+
+def ssd_recurrence_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                       B: jnp.ndarray, C: jnp.ndarray,
+                       state: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Step-by-step SSD recurrence (the unarguable oracle).
+
+    x: (s, h, dh), dt: (s, h), A: (h,) (negative), B,C: (s, ds) [ngroups=1].
+    state: (h, ds, dh).  Returns (y (s, h, dh), final_state).
+
+        S_t = exp(dt_t A) S_{t-1} + dt_t B_t ⊗ x_t;   y_t = C_t · S_t
+    """
+    s, h, dh = x.shape
+    ds = B.shape[-1]
+    if state is None:
+        state = jnp.zeros((h, ds, dh), jnp.float32)
+
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp                      # (h,dh),(h,),(ds,),(ds,)
+        decay = jnp.exp(dtt * Af)                  # (h,)
+        S = S * decay[:, None, None] + jnp.einsum(
+            "h,s,hd->hsd", dtt, Bt, xt)            # (h, ds, dh)
+        y = jnp.einsum("s,hsd->hd", Ct, S)
+        return S, y
+
+    final, y = jax.lax.scan(step, state, (xf, dtf, Bf, Cf))
+    return y.astype(x.dtype), final
+
+
+def ssd_chunked_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    B: jnp.ndarray, C: jnp.ndarray, chunk: int = 64,
+                    state: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD (state-space duality, arXiv:2405.21060): within-chunk
+    quadratic "attention" term + cross-chunk recurrence.  Matmul-rich —
+    this is the MXU-friendly form the Pallas kernel tiles, and the XLA
+    path model code uses.  Same signature/semantics as the recurrence.
+    """
+    s, h, dh = x.shape
+    ds = B.shape[-1]
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        # zero-dt padding is an exact no-op for the recurrence: decay
+        # exp(0·A)=1 and the B⊗x term is zeroed, so the final state is
+        # unchanged; padded outputs are sliced away below.
+        pad = s_pad - s
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, pad), (0, 0)))
+    n = s_pad // chunk
+    if state is None:
+        state = jnp.zeros((h, ds, dh), jnp.float32)
+
+    xf = x.astype(jnp.float32).reshape(n, chunk, h, dh)
+    dtf = dt.astype(jnp.float32).reshape(n, chunk, h)
+    Bf = B.astype(jnp.float32).reshape(n, chunk, ds)
+    Cf = C.astype(jnp.float32).reshape(n, chunk, ds)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        xc, dtc, Bc, Cc = inp                       # (Q,h,dh),(Q,h),(Q,ds)
+        dtA = dtc * Af[None, :]                     # (Q, h)
+        cum = jnp.cumsum(dtA, axis=0)               # (Q, h)
+        # Intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (B_j.C_i) x_j
+        diff = cum[:, None, :] - cum[None, :, :]    # (Q, Q, h)
+        mask = jnp.tril(jnp.ones((xc.shape[0],) * 2, bool))
+        L = jnp.where(mask[..., None], jnp.exp(diff), 0.0)
+        G = jnp.einsum("is,js->ij", Cc, Bc)         # (Q, Q)
+        W = G[..., None] * L                        # (Q, Q, h)
+        y_intra = jnp.einsum("ijh,jh,jhd->ihd", W, dtc, xc)
+        # Inter-chunk: contribution of carried state.
+        y_inter = jnp.einsum("is,hsd,ih->ihd", Cc, S, jnp.exp(cum))
+        # State update: S' = exp(cum[-1]) S + sum_j exp(cum[-1]-cum_j) dt_j B_j ⊗ x_j
+        decay_last = jnp.exp(cum[-1:, :] - cum)     # (Q, h)
+        S = S * jnp.exp(cum[-1])[:, None, None] + jnp.einsum(
+            "jh,js,jhd->hsd", decay_last * dtc, Bc, xc)
+        return S, y_intra + y_inter
+
+    final, y = jax.lax.scan(chunk_step, state, (xf, dtf, Bf, Cf))
+    y = y.reshape(s_pad, h, dh)[:s]
+    return y.astype(x.dtype), final
+
+
+# --- stencil (paper Listing 6) ------------------------------------------------------
+
+
+def stencil2d_ref(x: jnp.ndarray, iters: int = 1) -> jnp.ndarray:
+    """4-point average stencil with zero boundary, iterated ``iters`` times
+    (the iterative case is the paper's cyclic-dataflow motivation)."""
+    def one(x):
+        xp = jnp.pad(x, 1)
+        return 0.25 * (xp[:-2, 1:-1] + xp[2:, 1:-1]
+                       + xp[1:-1, :-2] + xp[1:-1, 2:])
+    for _ in range(iters):
+        x = one(x)
+    return x
+
+
+# --- tree reduction ------------------------------------------------------------------
+
+
+def rowreduce_ref(x: jnp.ndarray, op: str = "add") -> jnp.ndarray:
+    """Reduce the last axis; oracle for the tree-reduce kernel."""
+    if op == "add":
+        return jnp.sum(x, axis=-1)
+    if op == "max":
+        return jnp.max(x, axis=-1)
+    raise ValueError(op)

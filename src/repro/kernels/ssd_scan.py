@@ -1,0 +1,104 @@
+"""Mamba2 SSD (state-space duality) chunked scan for TPU.
+
+Hardware adaptation: the CUDA Mamba2 kernel leans on warp-level shuffles
+for the intra-chunk scan.  On TPU we use the *duality* itself as the
+adaptation: the chunked form turns the recurrence into MXU-shaped
+matmuls — (Q×Q)·(Q×dh) intra-chunk "attention" plus a small (ds×dh)
+carried state — and the sequential Pallas grid carries the state across
+chunks in VMEM scratch (same idiom as the flash kernel's online
+softmax).  No shuffle analogue is needed; the systolic array does the
+work.  The carried state is a literal F6 shift register of depth 1 over
+chunks; the decay-weighted combine is the F7 functor pattern.
+
+Layout: one grid row per (batch·head); chunk index innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import datapack
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_scr, *,
+                chunk: int):
+    jc = pl.program_id(1)
+
+    @pl.when(jc == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)         # (Q, dh)
+    dt = dt_ref[0].astype(jnp.float32)       # (Q, 1)  [lane-padded]
+    A = a_ref[0, 0]                          # scalar for this head
+    B = b_ref[0].astype(jnp.float32)         # (Q, ds)
+    C = c_ref[0].astype(jnp.float32)         # (Q, ds)
+
+    dtA = dt[:, 0] * A                       # (Q,)
+    cum = jnp.cumsum(dtA)                    # (Q,)
+    # Intra-chunk quadratic term on the MXU.
+    diff = cum[:, None] - cum[None, :]       # (Q, Q)
+    qq_mask = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0)
+    L = jnp.where(qq_mask, jnp.exp(diff), 0.0)
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    W = G * L
+    xdt = x * dt                             # (Q, dh)
+    y = jax.lax.dot_general(W, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # Inter-chunk: y += exp(cum) * (C @ S)
+    S = s_scr[...]                           # (ds, dh)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # State update: S' = exp(cum[-1]) S + B^T diag(exp(cum[-1]-cum)·dt) x
+    decay_last = jnp.exp(cum[-1] - cum)      # (Q,)
+    s_scr[...] = S * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        B * (decay_last * dt[:, 0])[:, None], x,
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, chunk: int = 64,
+             interpret: bool = False) -> jnp.ndarray:
+    """x: (b, s, h, dh); dt: (b, s, h); A: (h,); B, C: (b, s, ds)
+    [ngroups = 1].  Returns y: (b, s, h, dh).  ``s % chunk == 0``.
+    """
+    b, s, h, dh = x.shape
+    ds = B.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not a multiple of chunk {chunk}")
+    n = s // chunk
+
+    # Lay out as (b·h, s, ·) rows so one grid row owns one head's scan.
+    xr = x.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    dtr = dt.transpose(0, 2, 1).reshape(b * h, s, 1)
+    ar = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1)
+    br = jnp.broadcast_to(B[:, None], (b, h, s, ds)).reshape(b * h, s, ds)
+    cr = jnp.broadcast_to(C[:, None], (b, h, s, ds)).reshape(b * h, s, ds)
+
+    grid = (b * h, n)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ds, dh), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

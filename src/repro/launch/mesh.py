@@ -1,0 +1,24 @@
+"""Production mesh factory (assignment contract).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state — the F2 portability rule (the dry-run sets
+``XLA_FLAGS`` before first jax init; tests see 1 device)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Small simulated meshes for tests/examples (host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,103 @@
+"""Declarative parameter trees — one source of truth for init, sharding
+specs, and abstract (dry-run) shapes.
+
+Model code declares each tensor once as a ``Decl`` (shape + logical axes
++ init).  Three interpreters consume the same tree:
+
+* ``init_params``      -> concrete fp32 arrays (deterministic per path)
+* ``abstract_params``  -> ShapeDtypeStructs (the dry-run's no-allocation path)
+* ``param_specs``      -> PartitionSpecs via the logical-axis rules
+
+This is the F1 principle (configuration separated from source): sharding
+lives in the rule table, not the model definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import spec_for
+
+
+@dataclasses.dataclass(frozen=True)
+class Decl:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"       # normal | zeros | ones
+    std: Optional[float] = None  # override stddev for normal
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank "
+                             "mismatch")
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, Decl)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) >= 2:
+        return shape[-2]
+    return shape[-1]
+
+
+def init_params(decls, seed: int = 0):
+    """Deterministic init: every leaf's key derives from its tree path, so
+    adding/removing parameters never silently reshuffles others (a
+    checkpoint-compat property the fault-tolerance layer relies on)."""
+
+    def leaf(path, d: Decl):
+        h = int.from_bytes(
+            hashlib.sha256(f"{seed}:{_path_str(path)}".encode()).digest()[:8],
+            "little")
+        key = jax.random.key(h % (2 ** 63))
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        std = d.std if d.std is not None else 1.0 / np.sqrt(_fan_in(d.shape))
+        return (jax.random.normal(key, d.shape, jnp.float32) * std
+                ).astype(d.dtype)
+
+    return jax.tree_util.tree_map_with_path(leaf, decls,
+                                            is_leaf=_is_decl)
+
+
+def abstract_params(decls):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decls,
+        is_leaf=_is_decl)
+
+
+def param_specs(decls, mesh=None):
+    """Specs from logical axes with shape-aware assignment: a mesh axis
+    that does not divide its dimension is skipped without being consumed
+    (jit argument shardings must divide evenly — e.g. a batch-1 cache
+    can't shard over 'data'; 40 kv heads can't take 'model', which then
+    falls through to the kv_seq dim)."""
+    return jax.tree.map(lambda d: spec_for(d.axes, mesh, d.shape), decls,
+                        is_leaf=_is_decl)
+
+
+def param_count(decls) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(decls, is_leaf=_is_decl))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)

@@ -1,0 +1,138 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+tpulib feature usage (DESIGN §6):
+* the depthwise causal conv is a literal 4-tap **shift register** (F6):
+  training uses the windowed form, decode carries the register state via
+  ``core.shiftreg.causal_conv_shiftreg`` semantics;
+* the chunked SSD scan is matmul-rich (MXU) — Pallas kernel
+  ``kernels/ssd_scan.py`` on TPU, ``kernels/ref.ssd_chunked_ref`` as the
+  XLA path;
+* the cross-chunk state combine is the F7 decay-weighted functor.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..distributed.sharding import constrain
+from ..kernels import ops, ref
+from .layers import rmsnorm
+from .params import Decl
+
+F32 = jnp.float32
+
+
+def mamba2_decls(cfg, stack: Tuple[int, ...] = ()) -> Dict[str, Decl]:
+    d, din, ds, h, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.ssm_heads, cfg.ssm_conv)
+    conv_dim = din + 2 * ds
+    ax = ("stack",) * len(stack)
+    return {
+        "norm": Decl(stack + (d,), ax + ("embed",), init="zeros"),
+        # in_proj -> [z (din) | xBC (din + 2 ds) | dt (h)]
+        "w_in": Decl(stack + (d, 2 * din + 2 * ds + h),
+                     ax + ("embed", "d_inner")),
+        "conv_w": Decl(stack + (K, conv_dim), ax + ("conv", "d_inner"),
+                       std=0.5),
+        "conv_b": Decl(stack + (conv_dim,), ax + ("d_inner",), init="zeros"),
+        "A_log": Decl(stack + (h,), ax + ("ssm_heads",), init="zeros"),
+        "D": Decl(stack + (h,), ax + ("ssm_heads",), init="ones"),
+        "dt_bias": Decl(stack + (h,), ax + ("ssm_heads",), init="zeros"),
+        "gate_norm": Decl(stack + (din,), ax + ("d_inner",), init="zeros"),
+        "w_out": Decl(stack + (din, d), ax + ("d_inner", "embed")),
+    }
+
+
+def _split_in(cfg, zxbcdt):
+    din, ds, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * ds]
+    dt = zxbcdt[..., 2 * din + 2 * ds:]
+    return z, xbc, dt
+
+
+def _conv_train(xbc, w, b):
+    """Depthwise causal conv over time: windowed shift-register form.
+
+    xbc: (b, s, C); w: (K, C).  Equivalent to scanning
+    ``core.shiftreg.causal_conv_shiftreg`` over time (tested), but
+    expressed with static shifts so XLA sees K shifted adds, not a
+    length-s dependence chain.
+    """
+    K = w.shape[0]
+    out = jnp.zeros_like(xbc, dtype=F32)
+    for k in range(K):                       # static taps (F6)
+        shift = K - 1 - k
+        xs = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, :xbc.shape[1]]
+        out = out + xs.astype(F32) * w[k].astype(F32)
+    return jax.nn.silu(out + b.astype(F32)).astype(xbc.dtype)
+
+
+def mamba2_apply(cfg, p, x, *, cache: Optional[Dict] = None,
+                 pos=None):
+    """Pre-norm Mamba2 block with residual.  Train/prefill when cache is
+    None; one-token decode otherwise.  cache = {"conv": (b, K-1, C),
+    "ssd": (b, h, ds, hd)}."""
+    b, s, d = x.shape
+    din, ds, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    h = cfg.ssm_heads
+    res = x
+    xn = rmsnorm(x, p["norm"])
+    zxbcdt = xn @ p["w_in"]
+    zxbcdt = constrain(zxbcdt, "batch", None, "d_inner")
+    z, xbc, dt_raw = _split_in(cfg, zxbcdt)
+    A = -jnp.exp(p["A_log"].astype(F32))                    # (h,)
+
+    if cache is None:
+        xbc = _conv_train(xbc, p["conv_w"], p["conv_b"])
+        x_ssm = xbc[..., :din].reshape(b, s, h, hd)
+        B = xbc[..., din:din + ds]
+        C = xbc[..., din + ds:]
+        dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"].astype(F32))
+        x_ssm = constrain(x_ssm, "batch", None, "ssm_heads", None)
+        y = ops.ssd(x_ssm.astype(F32), dt, A, B.astype(F32), C.astype(F32),
+                    chunk=cfg.ssm_chunk, use_pallas=cfg.use_pallas)
+        y = y + p["D"].astype(F32)[None, None, :, None] * x_ssm.astype(F32)
+        new_cache = None
+    else:
+        # Decode: conv shift register (F6) + O(1) SSD state update.
+        conv_st, ssd_st = cache["conv"], cache["ssd"]       # (b,K-1,C),(b,h,ds,hd)
+        window = jnp.concatenate([conv_st.astype(F32),
+                                  xbc.astype(F32)], axis=1)  # (b, K, C)
+        conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(F32))
+        xbc1 = jax.nn.silu(conv_out + p["conv_b"].astype(F32))[:, None]
+        x_ssm = xbc1[..., :din].reshape(b, 1, h, hd)
+        B = xbc1[..., din:din + ds]                          # (b, 1, ds)
+        C = xbc1[..., din + ds:]
+        dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"].astype(F32))
+        dtA = dt[:, 0, :] * A                                # (b, h)
+        Sn = (ssd_st.astype(F32) * jnp.exp(dtA)[..., None, None]
+              + jnp.einsum("bh,bs,bhd->bhsd", dt[:, 0], B[:, 0],
+                           x_ssm[:, 0].astype(F32)))
+        y = jnp.einsum("bs,bhsd->bhd", C[:, 0], Sn)[:, None]  # (b,1,h,hd)
+        y = y + p["D"].astype(F32)[None, None, :, None] * x_ssm.astype(F32)
+        new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                     "ssd": Sn.astype(cache["ssd"].dtype)}
+
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                p["gate_norm"])
+    out = y @ p["w_out"]
+    out = constrain(out, "batch", None, "embed")
+    return res + out, new_cache
+
+
+def mamba2_cache_decl(cfg, batch: int) -> Dict[str, Decl]:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": Decl((batch, cfg.ssm_conv - 1, conv_dim),
+                     ("batch", None, "d_inner"), jnp.float32, init="zeros"),
+        "ssd": Decl((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+                    ("batch", "ssm_heads", None, None), jnp.float32,
+                    init="zeros"),
+    }

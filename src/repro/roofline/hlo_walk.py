@@ -1,0 +1,375 @@
+"""Trip-count-aware HLO cost walker.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scan-over-layers models (an 88-layer granite shows one layer of FLOPs).
+This walker parses the optimized HLO text and:
+
+* multiplies every while body by its ``known_trip_count`` backend config
+  (XLA annotates scan-derived loops; fallback: parse the condition's
+  ``constant(N)`` bound, else 1),
+* counts dot FLOPs exactly (2 · |result| · |contracting dims|),
+* models HBM traffic as one read per operand + one write per result of
+  every *materialized* op (fusions are leaves: their internals stay in
+  registers/VMEM — the XLA fusion memory model),
+* counts collective wire bytes per kind (operand bytes; all-gather uses
+  result bytes so the number reflects what actually crosses links),
+* attributes all three to jit scope names (metadata op_name) so the perf
+  loop can rank offenders.
+
+The walker is validated against analytic per-arch FLOP formulas in
+``tests/test_roofline.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{$")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\)?\s*([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that never touch HBM on their own
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "reshape"}
+
+# TPU-fusion approximation: the CPU backend leaves elementwise chains
+# unfused (hundreds of top-level converts/multiplies), which a TPU
+# compile would fuse into neighbouring kernels.  Treat them as free; the
+# producing/consuming dots, reduces, copies and loop boundaries carry
+# the traffic.  Documented in EXPERIMENTS.md §Roofline (methodology).
+_ELEMENTWISE = {
+    "convert", "multiply", "add", "subtract", "divide", "select",
+    "maximum", "minimum", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "negate", "sqrt", "rsqrt", "tanh", "power", "compare",
+    "and", "or", "not", "xor", "broadcast", "reduce-precision", "clamp",
+    "abs", "sign", "floor", "ceil", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "is-finite", "atan2",
+    "expm1", "log1p", "logistic", "cbrt", "round-nearest-afz",
+    "round-nearest-even", "pad", "transpose", "slice", "rng",
+    "rng-bit-generator", "map", "cosine", "sine", "real", "imag",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 0)
+               for dt, dims in _SHAPE_RE.findall(text))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_text: str          # result type(s) text
+    operands: List[str]
+    line: str
+    op_name: str = ""         # jit scope metadata
+    called: List[str] = dataclasses.field(default_factory=list)
+    trip: int = 1
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]    # op name -> result type text
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HDR_RE.match(line.strip()) if line and not line.startswith(
+                ("HloModule", "//", "#")) else None
+            if m and not line.startswith(" "):
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry_name = m.group(2)
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result text = up to the opcode
+        oc = _OPCODE_RE.search(rhs)
+        if not oc:
+            continue
+        opcode = oc.group(1)
+        result_text = rhs[:oc.start()]
+        # async wrappers: "all-reduce-start", "-done"
+        operands_text = rhs[oc.end():]
+        depth, i0, ops_str = 1, 0, ""
+        for i, ch in enumerate(operands_text):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    ops_str = operands_text[:i]
+                    break
+        operands = re.findall(r"%([\w.\-]+)", ops_str)
+        op = Op(name=name, opcode=opcode, result_text=result_text,
+                operands=operands, line=rhs)
+        mt = _TRIP_RE.search(rhs)
+        if mt:
+            op.trip = int(mt.group(1))
+        mo = _OPNAME_RE.search(rhs)
+        if mo:
+            op.op_name = mo.group(1)
+        op.called = _CALLED_RE.findall(rhs)
+        cur.ops.append(op)
+        cur.shapes[name] = result_text
+    if cur is not None:
+        comps[cur.name] = cur
+    comps["__entry__"] = comps.get(entry_name) if entry_name else None
+    return comps
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    by_scope_flops: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    by_scope_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    by_scope_coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def scaled(self, k: float) -> "Costs":
+        c = Costs(self.flops * k, self.bytes * k)
+        for d_src, d_dst in ((self.coll, c.coll),
+                             (self.by_scope_flops, c.by_scope_flops),
+                             (self.by_scope_bytes, c.by_scope_bytes),
+                             (self.by_scope_coll, c.by_scope_coll)):
+            for key, v in d_src.items():
+                d_dst[key] = v * k
+        return c
+
+    def add(self, o: "Costs") -> None:
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for key, v in o.coll.items():
+            self.coll[key] += v
+        for key, v in o.by_scope_flops.items():
+            self.by_scope_flops[key] += v
+        for key, v in o.by_scope_bytes.items():
+            self.by_scope_bytes[key] += v
+        for key, v in o.by_scope_coll.items():
+            self.by_scope_coll[key] += v
+
+
+def _scope(op_name: str, depth: int = 4) -> str:
+    """Compress a jit scope path to its trailing meaningful segments."""
+    if not op_name:
+        return "(unattributed)"
+    parts = [p for p in op_name.split("/") if not p.startswith("jit(")]
+    return "/".join(parts[-depth:]) if parts else op_name
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = sum(_shape_elems(d) for _, d in
+                    _SHAPE_RE.findall(op.result_text))
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not mc or not op.operands:
+        return 2.0 * out_elems
+    lhs_text = comp.shapes.get(op.operands[0], "")
+    sh = _SHAPE_RE.search(lhs_text)
+    if not sh:
+        return 2.0 * out_elems
+    dims = [int(x) for x in sh.group(2).split(",")] if sh.group(2) else []
+    contract = 1
+    for ix in (int(x) for x in mc.group(1).split(",") if x):
+        if ix < len(dims):
+            contract *= dims[ix]
+    return 2.0 * out_elems * contract
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    if op.opcode in _FREE_OPS or op.opcode in _ELEMENTWISE:
+        return 0.0
+    if op.opcode == "dynamic-slice":
+        # read slice + write result
+        return 2.0 * _shapes_bytes(op.result_text)
+    if op.opcode == "dynamic-update-slice":
+        # in-place: read update + write slice (operand 1 is the update)
+        upd = (_shapes_bytes(comp.shapes.get(op.operands[1], ""))
+               if len(op.operands) > 1 else 0)
+        return 2.0 * upd
+    if op.opcode == "concatenate":
+        return 2.0 * _shapes_bytes(op.result_text)
+    total = _shapes_bytes(op.result_text)
+    for o in op.operands:
+        total += _shapes_bytes(comp.shapes.get(o, ""))
+    return float(total)
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  comps: Dict[str, "Computation"]) -> float:
+    """Boundary traffic of a fusion under a TPU-fusion model:
+
+    * pure-elementwise fusions are free (TPU fuses them into neighbours;
+      the CPU backend wraps singles in kLoop fusions),
+    * a parameter consumed only by (dynamic-)slice/gather ops reads just
+      the slices (scan bodies slice stacked layer params inside fusions
+      — full-stack × trip-count would overstate weight traffic),
+    * an in-place dynamic-update-slice fusion costs 2×update, not the
+      full aliased buffer (scan carries/residual stacks).
+    """
+    fcomp = comps.get(op.called[0]) if op.called else None
+    if fcomp is None:
+        return float(_shapes_bytes(op.result_text)) + sum(
+            _shapes_bytes(comp.shapes.get(o, "")) for o in op.operands)
+    kinds = {o.opcode for o in fcomp.ops} - _FREE_OPS - _ELEMENTWISE
+    if not kinds:
+        return 0.0  # pure elementwise — fused away on TPU
+    dus_ops = [o for o in fcomp.ops if o.opcode == "dynamic-update-slice"]
+    params: Dict[int, str] = {}
+    for fop in fcomp.ops:
+        if fop.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", fop.line)
+            if m:
+                params[int(m.group(1))] = fop.name
+    aliased = {d.operands[0] for d in dus_ops if d.operands}
+    if dus_ops:
+        # in-place update: write+read of the updates only
+        total = 2.0 * sum(
+            _shapes_bytes(fcomp.shapes.get(d.operands[1], ""))
+            for d in dus_ops if len(d.operands) > 1)
+    else:
+        total = float(_shapes_bytes(op.result_text))
+    for idx, o in enumerate(op.operands):
+        full = _shapes_bytes(comp.shapes.get(o, ""))
+        pname = params.get(idx)
+        if pname is None:
+            total += full
+            continue
+        if pname in aliased:
+            continue  # in-place DUS target
+        uses = [fop for fop in fcomp.ops if pname in fop.operands]
+        if uses and all(u.opcode in ("dynamic-slice", "slice", "gather")
+                        for u in uses):
+            total += sum(_shapes_bytes(u.result_text) for u in uses)
+        else:
+            total += full
+    return total
+
+
+def _coll_bytes(op: Op, comp: Computation, kind: str) -> float:
+    if kind == "all-gather":
+        return float(_shapes_bytes(op.result_text))
+    return float(sum(_shapes_bytes(comp.shapes.get(o, ""))
+                     for o in op.operands))
+
+
+def walk(hlo: str) -> Costs:
+    comps = parse_module(hlo)
+    entry = comps.pop("__entry__")
+    memo: Dict[str, Costs] = {}
+
+    def comp_cost(cname: str) -> Costs:
+        if cname in memo:
+            return memo[cname]
+        comp = comps.get(cname)
+        c = Costs()
+        if comp is None:
+            memo[cname] = c
+            return c
+        memo[cname] = c  # guard cycles (shouldn't exist)
+        for op in comp.ops:
+            scope = _scope(op.op_name)
+            kind = next((k for k in _COLLECTIVES
+                         if op.opcode.startswith(k)), None)
+            if op.opcode == "while":
+                inner = Costs()
+                for called in op.called:
+                    inner.add(comp_cost(called))
+                c.add(inner.scaled(op.trip))
+            elif op.opcode in ("call", "conditional"):
+                for called in op.called:
+                    c.add(comp_cost(called))
+            elif op.opcode == "fusion":
+                # fused dots still do FLOPs; bytes = boundary traffic only.
+                for called in op.called:
+                    sub = comp_cost(called)
+                    c.flops += sub.flops
+                    for key, v in sub.by_scope_flops.items():
+                        c.by_scope_flops[key] += v
+                b = _fusion_bytes(op, comp, comps)
+                c.bytes += b
+                c.by_scope_bytes[scope] += b
+            elif kind is not None:
+                if op.opcode.endswith("-done"):
+                    continue
+                b = _coll_bytes(op, comp, kind)
+                c.coll[kind] += b
+                c.coll["total"] = c.coll.get("total", 0.0) + b
+                c.by_scope_coll[scope] += b
+                bb = _op_bytes(op, comp)
+                c.bytes += bb
+                c.by_scope_bytes[scope] += bb
+            elif op.opcode == "dot":
+                f = _dot_flops(op, comp)
+                c.flops += f
+                c.by_scope_flops[scope] += f
+                b = _op_bytes(op, comp)
+                c.bytes += b
+                c.by_scope_bytes[scope] += b
+            elif op.opcode in ("convolution",):
+                f = 2.0 * sum(_shape_elems(d) for _, d in
+                              _SHAPE_RE.findall(op.result_text))
+                c.flops += f
+                c.by_scope_flops[scope] += f
+                c.bytes += _op_bytes(op, comp)
+            elif op.opcode == "copy":
+                b = _op_bytes(op, comp)
+                c.bytes += b
+                c.by_scope_bytes[scope] += b
+            else:
+                b = _op_bytes(op, comp)
+                c.bytes += b
+                c.by_scope_bytes[scope] += b
+        memo[cname] = c
+        return c
+
+    if entry is None:
+        return Costs()
+    return comp_cost(entry.name)
+
+
+def top_scopes(d: Dict[str, float], k: int = 12) -> List[Tuple[str, float]]:
+    return sorted(d.items(), key=lambda kv: -kv[1])[:k]

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the roofline denominators)."""
+
+PEAK_BF16_FLOPS = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~per-chip injection)
+
+VMEM_BYTES = 128 * 2 ** 20     # v5e VMEM (~128 MiB)
+HBM_BYTES = 16 * 2 ** 30       # per chip

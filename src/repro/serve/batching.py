@@ -1,0 +1,146 @@
+"""Continuous batching built on tpulib Streams (F4) + dataflow (F3).
+
+Requests arrive on a bounded ``Stream`` (the hlslib FIFO); the batcher PE
+packs them into fixed slots, decodes all active slots together (per-slot
+positions via ``vmap`` over a single-sequence decode), and retires
+finished sequences into per-request output streams, immediately reusing
+the slot — continuous batching.  Producer/batcher/consumer is exactly
+the paper's Read/Compute/Write dataflow and runs under
+``DataflowContext`` in ``examples/serve_lm.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.stream import Stream, StreamClosed
+from ..models import registry
+from ..models import params as PP
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new: int
+    out: Stream = dataclasses.field(
+        default_factory=lambda: Stream(depth=4096, name="resp"))
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0
+    remaining: int = 0
+    last_tok: int = 0
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batcher over vmapped single-sequence decode."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
+                 max_seq: int):
+        if cfg.family in ("vlm", "audio"):
+            raise NotImplementedError("batcher demo covers LM families")
+        self.cfg, self.params = cfg, params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.requests: Stream = Stream(depth=2 * n_slots, name="requests")
+        self.steps = 0
+        self.retired = 0
+
+        cache_d = registry.cache_decls(cfg, 1, max_seq)
+        one = PP.init_params(cache_d)  # zeros (init=zeros decls)
+        self.cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_slots,) + a.shape).copy(), one)
+
+        def decode_one(params, cache, tok, pos):
+            logits, cache = registry.forward(
+                cfg, params, {"tokens": tok[None, None]}, mode="decode",
+                cache=cache, pos=pos)
+            return logits[0, -1], cache
+
+        self._decode = jax.jit(jax.vmap(decode_one, in_axes=(None, 0, 0, 0)))
+
+        def prefill_one(params, prompt):
+            logits, cache = registry.forward(
+                cfg, params, {"tokens": prompt[None]}, mode="prefill",
+                cache_len=max_seq)
+            return logits[0, -1], cache
+
+        self._prefill = jax.jit(prefill_one)
+
+    # -- scheduling ---------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.requests.Push(req)
+
+    def _admit_one(self, slot_idx: int, r: Request) -> None:
+        logits, cache1 = self._prefill(self.params, jnp.asarray(r.prompt))
+        self.cache = jax.tree.map(
+            lambda c, c1: c.at[slot_idx].set(c1), self.cache, cache1)
+        tok = int(np.argmax(np.asarray(logits)))
+        r.out.Push(tok)
+        self.slots[slot_idx] = _Slot(req=r, pos=len(r.prompt),
+                                     remaining=r.max_new - 1, last_tok=tok)
+
+    def admit(self) -> int:
+        n = 0
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                r = self.requests.TryPop()
+                if r is None:
+                    break
+                self._admit_one(i, r)
+                n += 1
+        return n
+
+    def step(self) -> int:
+        """One batched decode step; returns number of sequences retired."""
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray([s.last_tok for s in self.slots], jnp.int32)
+        pos = jnp.asarray([s.pos for s in self.slots], jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        logits = np.asarray(logits)
+        done = 0
+        for i in active:
+            s = self.slots[i]
+            nxt = int(np.argmax(logits[i]))
+            s.req.out.Push(nxt)
+            s.last_tok = nxt
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining <= 0 or s.pos >= self.max_seq - 1:
+                s.req.out.close()
+                self.slots[i] = _Slot()
+                done += 1
+        self.steps += 1
+        self.retired += done
+        return done
+
+    def run(self, total_requests: int) -> None:
+        """Batcher PE: admit + decode until ``total_requests`` retire."""
+        while self.retired < total_requests:
+            if self.admit() == 0 and all(s.req is None for s in self.slots):
+                self._admit_one(0, self.requests.Pop())   # block for work
+            self.step()
+
+
+def drain(req: Request) -> List[int]:
+    """Consumer PE helper: collect a request's full output stream."""
+    out: List[int] = []
+    while True:
+        try:
+            out.append(req.out.Pop(timeout=30))
+        except (StreamClosed, TimeoutError):
+            break
+    return out

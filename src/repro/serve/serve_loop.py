@@ -1,0 +1,99 @@
+"""Serving: prefill/decode step builders + a simple generation driver.
+
+``make_serve_steps`` builds the two jitted entry points the dry-run
+lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells:
+
+* ``prefill(params, batch)``            -> (logits_last, cache)
+* ``decode(params, cache, tokens, pos)`` -> (logits, cache)
+
+Caches are declarative (``registry.cache_decls``) so shardings come from
+the same logical-axis rules as parameters — the MLA compressed cache and
+the sliding-window ring caches are just different Decl trees.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import registry
+from ..models import params as PP
+
+
+def make_serve_steps(cfg: ModelConfig, batch: int, max_seq: int,
+                     mesh: Optional[Mesh] = None):
+    decls = registry.decls(cfg)
+    cache_d = registry.cache_decls(cfg, batch, max_seq)
+    ab_cache = PP.abstract_params(cache_d)
+    c_specs = PP.param_specs(cache_d, mesh)
+    p_specs = PP.param_specs(decls, mesh)
+
+    def prefill(params, batch_in):
+        logits, cache = registry.forward(cfg, params, batch_in,
+                                         mode="prefill", cache_len=max_seq)
+        return logits, cache
+
+    def decode(params, cache, tokens, pos):
+        batch_in = dict(tokens)
+        logits, cache = registry.forward(cfg, params, batch_in,
+                                         mode="decode", cache=cache, pos=pos)
+        return logits, cache
+
+    if mesh is None:
+        return (jax.jit(prefill), jax.jit(decode, donate_argnums=(1,)),
+                ab_cache, None)
+
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    batch_axes = []
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and batch % (prod * mesh.shape[a]) == 0:
+            batch_axes.append(a)
+            prod *= mesh.shape[a]
+    bspec = NamedSharding(mesh, P(tuple(batch_axes)) if batch_axes else P())
+    pre = jax.jit(prefill, in_shardings=(ns(p_specs), bspec),
+                  out_shardings=(bspec, ns(c_specs)))
+    dec = jax.jit(decode,
+                  in_shardings=(ns(p_specs), ns(c_specs), bspec, None),
+                  out_shardings=(bspec, ns(c_specs)),
+                  donate_argnums=(1,))
+    return pre, dec, ab_cache, (ns(p_specs), ns(c_specs))
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt_batch: Dict,
+                    steps: int, max_seq: int, temperature: float = 0.0,
+                    seed: int = 0):
+    """CPU-runnable generation driver (examples + integration tests)."""
+    tok = prompt_batch["tokens"]
+    b = tok.shape[0]
+    prompt_len = tok.shape[1] + (cfg.vision_patches
+                                 if cfg.family == "vlm" else 0)
+    pre, dec, _, _ = make_serve_steps(cfg, b, max_seq)
+    logits, cache = pre(params, prompt_batch)
+    out = []
+    key = jax.random.key(seed)
+    pos = prompt_len
+    extras = {k: v for k, v in prompt_batch.items()
+              if k in ("cond",)}
+    for _ in range(steps):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits[:, -1] / temperature)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        if cfg.family == "audio":
+            tokens = nxt.astype(jnp.int32).reshape(b, 1, cfg.n_codebooks)
+        else:
+            tokens = nxt.astype(jnp.int32).reshape(b, 1)
+        out.append(np.asarray(tokens))
+        logits, cache = dec(params, cache,
+                            {"tokens": tokens, **extras}, jnp.int32(pos))
+        pos += 1
+    return np.concatenate(out, axis=1)

@@ -1,0 +1,170 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic re-meshing.
+
+At 1000+ nodes the assumptions are: (a) a node WILL fail mid-run, (b) a
+slow node is as bad as a dead one, (c) restart must not lose more than
+the checkpoint interval.  The pieces here are runtime-agnostic (they
+watch step timing, not hardware counters) and are exercised by tests
+that simulate failures on CPU:
+
+* ``Heartbeat``          — per-worker liveness with a miss threshold.
+* ``StragglerDetector``  — per-step EWMA/variance z-score; flags workers
+  (or the whole step pipeline) running slower than the fleet.
+* ``elastic_mesh``       — rebuild a smaller (or larger) mesh after
+  failures; ``reshard_state`` re-places a checkpointed state onto it
+  (works because checkpoints are full logical arrays, not raw shards).
+* ``TrainSupervisor``    — checkpoint-restart loop: run steps, save every
+  N, on simulated failure restore latest and continue; guarantees
+  bit-exact resume (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from . import checkpoint as ckpt
+
+
+class Heartbeat:
+    """Liveness registry.  Workers call ``beat(worker)``; the monitor
+    thread marks workers dead after ``timeout`` seconds of silence."""
+
+    def __init__(self, workers: Sequence[str], timeout: float = 10.0):
+        self.timeout = timeout
+        self._last: Dict[str, float] = {w: time.monotonic() for w in workers}
+        self._lock = threading.Lock()
+
+    def beat(self, worker: str) -> None:
+        with self._lock:
+            self._last[worker] = time.monotonic()
+
+    def dead(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.monotonic()
+        with self._lock:
+            return [w for w, t in self._last.items()
+                    if now - t > self.timeout]
+
+    def alive(self) -> List[str]:
+        d = set(self.dead())
+        with self._lock:
+            return [w for w in self._last if w not in d]
+
+
+class StragglerDetector:
+    """EWMA step-time tracker.  ``observe`` returns True when the new
+    sample is a straggler (> mean + z·std, with warmup grace)."""
+
+    def __init__(self, alpha: float = 0.2, z: float = 3.0, warmup: int = 5,
+                 min_dt: float = 0.05):
+        self.alpha, self.z, self.warmup = alpha, z, warmup
+        self.min_dt = min_dt      # ignore sub-jitter steps (CPU smoke runs)
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+
+    def observe(self, dt: float) -> bool:
+        self.n += 1
+        if self.n == 1:
+            self.mean = dt
+            return False
+        is_straggler = (self.n > self.warmup
+                        and dt > self.min_dt
+                        and dt > self.mean + self.z * math.sqrt(self.var)
+                        and dt > 1.5 * self.mean)
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler
+
+
+def elastic_mesh(axis_names: Tuple[str, ...], model_axis: int,
+                 devices: Optional[Sequence] = None) -> Mesh:
+    """Rebuild a mesh after failures: keep the model axis intact (TP
+    shards must stay complete) and shrink the data axis to whatever
+    device count survives — the standard elastic-DP policy."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    if n % model_axis:
+        usable = (n // model_axis) * model_axis
+        devices = devices[:usable]
+        n = usable
+    if n == 0:
+        raise RuntimeError("not enough devices for one model-parallel group")
+    data = n // model_axis
+    arr = np.array(devices).reshape((data, model_axis))
+    return Mesh(arr, axis_names)
+
+
+def reshard_state(state, specs, mesh: Mesh):
+    """Re-place a (restored) state pytree onto a new mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)),
+                                    NamedSharding(mesh, s)),
+        state, specs)
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_run: int = 0
+    restarts: int = 0
+    stragglers: int = 0
+    losses: List[float] = dataclasses.field(default_factory=list)
+
+
+class TrainSupervisor:
+    """Checkpoint/restart harness around a step function.
+
+    ``fail_at`` injects a simulated failure (exception) after the given
+    global steps — the test rig for restart semantics.  Real deployments
+    replace the exception with process death; the restore path is
+    identical because saves are atomic.
+    """
+
+    def __init__(self, step_fn: Callable, state: Any, ckpt_dir: str,
+                 save_every: int = 10, keep: int = 3):
+        self.step_fn = step_fn
+        self.state = state
+        self.ckpt_dir = ckpt_dir
+        self.save_every = save_every
+        self.keep = keep
+        self.detector = StragglerDetector()
+        self.report = SupervisorReport()
+
+    def run(self, batches: Callable[[int], Any], num_steps: int,
+            start_step: int = 0,
+            fail_at: Sequence[int] = ()) -> SupervisorReport:
+        step = start_step
+        fail_at = set(fail_at)
+        while step < num_steps:
+            try:
+                if step in fail_at:
+                    fail_at.discard(step)
+                    raise RuntimeError(f"simulated node failure @ step {step}")
+                t0 = time.monotonic()
+                self.state, metrics = self.step_fn(self.state, batches(step))
+                dt = time.monotonic() - t0
+                if self.detector.observe(dt):
+                    self.report.stragglers += 1
+                self.report.losses.append(float(metrics["loss"]))
+                step += 1
+                self.report.steps_run += 1
+                if step % self.save_every == 0:
+                    ckpt.save(self.ckpt_dir, step, self.state)
+                    ckpt.prune(self.ckpt_dir, self.keep)
+            except RuntimeError:
+                # restart path: restore latest checkpoint (or step 0 state).
+                self.report.restarts += 1
+                latest = ckpt.latest_step(self.ckpt_dir)
+                if latest is not None:
+                    self.state, step, _ = ckpt.restore(
+                        self.ckpt_dir, self.state)
+                else:
+                    step = start_step
+        return self.report

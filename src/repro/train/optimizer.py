@@ -1,0 +1,111 @@
+"""AdamW with cosine schedule, global-norm clipping, and ZeRO-1-style
+optimizer-state sharding.
+
+Built in plain JAX (no optax dependency) so that the optimizer-state
+pytree structure is under our control for sharded checkpointing.  The
+F7 ``tree_reduce_fn`` is used for the deterministic gradient-accumulation
+combine; the global-norm clip uses a balanced reduction over leaves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.treereduce import Add, tree_reduce_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class OptCfg:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    m: Any                     # pytree like params
+    v: Any
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def schedule(cfg: OptCfg, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(np.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos).astype(jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+          for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(tree_reduce_fn(sq, Add))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def update(cfg: OptCfg, grads, state: OptState, params
+           ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Gradients may arrive in bf16 (compressed
+    cross-pod reduction); moments and params update in fp32."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, v
+
+    out = jax.tree.map(leaf, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+def opt_specs(param_spec_tree, abstract_params, mesh, zero1: bool = False):
+    """PartitionSpecs for OptState.  With ``zero1`` the moments also shard
+    their first still-replicated dim over 'data' (ZeRO-1)."""
+    from jax.sharding import PartitionSpec as P
+    from ..distributed.sharding import zero_shard_spec
+
+    def mom_spec(spec, ab):
+        if not zero1:
+            return spec
+        return zero_shard_spec(spec, ab.shape, mesh)
+
+    m_specs = jax.tree.map(mom_spec, param_spec_tree, abstract_params)
+    return OptState(step=P(), m=m_specs, v=m_specs)

@@ -1,0 +1,138 @@
+"""train_step builder: loss, grads, update — with sharding, microbatch
+gradient accumulation, bf16 gradient reduction (compression), and remat
+policies.  ``make_train_step`` returns a jit-wrapped function plus the
+sharding trees the launcher / dry-run / checkpointing all reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain, spec_for
+from ..models import registry
+from ..models import params as PP
+from . import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    opt: opt.OptCfg = dataclasses.field(default_factory=opt.OptCfg)
+    grad_accum: int = 1             # microbatches per step
+    compress_grads: bool = True     # bf16 gradient reduction (2x bytes)
+    zero1: bool = False             # shard optimizer moments over data
+
+
+def cross_entropy(cfg: ModelConfig, logits: jnp.ndarray,
+                  labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean NLL over the *logical* vocab (padded-vocab logits masked out —
+    the DataPack padding must not leak probability mass)."""
+    V, Vp = cfg.vocab_size, cfg.padded_vocab
+    lf = logits.astype(jnp.float32)
+    if Vp != V:
+        neg = jnp.finfo(jnp.float32).min
+        mask = jnp.arange(Vp) < V
+        lf = jnp.where(mask, lf, neg)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jnp.ndarray, Dict]:
+    logits = registry.forward(cfg, params, batch, mode="train")
+    # next-token objective: labels are pre-shifted by the data pipeline.
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # loss only over text positions (after the vision prefix).
+        logits = logits[:, cfg.vision_patches:]
+    loss = cross_entropy(cfg, logits, labels)
+    return loss, {"loss": loss}
+
+
+def _split_micro(batch, n: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} % grad_accum {n} != 0"
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainCfg = TrainCfg(),
+                    mesh: Optional[Mesh] = None, donate: bool = True):
+    """Returns (step_fn, state_shardings, abstract_state).
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
+    """
+    decls = registry.decls(cfg)
+    ab_params = PP.abstract_params(decls)
+    p_specs = PP.param_specs(decls, mesh)
+
+    grad_dtype = jnp.bfloat16 if tcfg.compress_grads else jnp.float32
+
+    def step(params, opt_state, batch):
+        if tcfg.grad_accum > 1:
+            micro = _split_micro(batch, tcfg.grad_accum)
+
+            def acc_body(acc, mb):
+                (l, aux), g = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, mb), has_aux=True)(params)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 acc, g)
+                return g, l
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            grads, losses = jax.lax.scan(acc_body, g0, micro)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            loss = jnp.mean(losses)
+        else:
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        # bf16 "compressed" reduction: cast before the data/pod-axis
+        # all-reduce that GSPMD inserts at the psum of the grads; the
+        # constrain pins grads to the param layout so the reduction
+        # happens in grad_dtype (half the ICI bytes of fp32).
+        grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        if mesh is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, s)), grads, p_specs)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        params2, opt2, metrics = opt.update(tcfg.opt, grads, opt_state,
+                                            params)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ()), \
+            None, (ab_params, None)
+
+    o_specs = opt.opt_specs(p_specs, ab_params, mesh, tcfg.zero1)
+    batch_spec = P(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        NamedSharding(mesh, batch_spec),
+    )
+    out_shardings = (in_shardings[0], in_shardings[1], None)
+    fn = jax.jit(step, in_shardings=in_shardings,
+                 out_shardings=out_shardings,
+                 donate_argnums=(0, 1) if donate else ())
+    return fn, (in_shardings[0], in_shardings[1]), (ab_params, o_specs)
+
+
+def abstract_opt_state(ab_params):
+    return opt.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                       ab_params),
+        v=jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                       ab_params))

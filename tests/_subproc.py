@@ -1,0 +1,24 @@
+"""Helper: run a python snippet in a subprocess with N host devices
+(XLA device count locks at first jax init, so multi-device tests must
+fork; conftest deliberately leaves the main process at 1 device)."""
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 420
+                     ) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def check(code: str, n_devices: int = 8, timeout: int = 420) -> str:
+    r = run_with_devices(code, n_devices, timeout)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout

@@ -1,0 +1,7 @@
+# NOTE (assignment contract): XLA_FLAGS / host-device-count is NOT set
+# here — smoke tests must see 1 device.  Multi-device tests spawn
+# subprocesses (tests/_subproc.py) that set the flag before jax init.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

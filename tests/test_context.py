@@ -1,0 +1,65 @@
+"""F2 portable host runtime — the paper's Listing 2 on a CPU 'vendor'."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.context import Access, Context, MemoryBank
+
+
+def test_listing2_flow():
+    """The paper's host program, verbatim shape: context -> program ->
+    buffers -> kernel -> execute -> copy back."""
+    N = 1024
+    context = Context()
+    program = context.MakeProgram(
+        {"Kernel": lambda a, b, n: (a * 2.0 + b, n)})
+    input_host = np.full(N, 5.0, np.float32)
+    in_dev = context.MakeBuffer(jnp.float32, Access.read,
+                                MemoryBank.bank0, input_host)
+    out_dev = context.MakeBuffer(jnp.float32, Access.write,
+                                 MemoryBank.bank1, N)
+    kernel = program.MakeKernel("Kernel", in_dev, out_dev, N)
+    result, n = kernel.ExecuteTask()
+    host = np.empty(N, np.float32)
+    np.copyto(host, np.asarray(result))
+    np.testing.assert_allclose(host, 10.0)
+
+
+def test_buffer_access_modes():
+    ctx = Context()
+    b = ctx.MakeBuffer(jnp.float32, Access.read, MemoryBank.bank0,
+                       np.ones(4, np.float32))
+    with pytest.raises(PermissionError):
+        b.CopyFromHost(np.zeros(4, np.float32))
+    w = ctx.MakeBuffer(jnp.float32, Access.write, MemoryBank.bank0, 4)
+    w.CopyFromHost(np.arange(4, dtype=np.float32))
+    np.testing.assert_array_equal(w.CopyToHost(), np.arange(4))
+
+
+def test_kernel_introspection():
+    ctx = Context()
+    prog = ctx.MakeProgram({"mm": lambda a, b: a @ b})
+    a = ctx.MakeBuffer(jnp.float32, Access.read, MemoryBank.bank0,
+                       np.ones((64, 64), np.float32))
+    k = prog.MakeKernel("mm", a, a)
+    assert "dot" in k.hlo_text() or "fusion" in k.hlo_text()
+    out = k.ExecuteTask()
+    np.testing.assert_allclose(np.asarray(out), 64.0)
+
+
+def test_unknown_kernel_rejected():
+    ctx = Context()
+    prog = ctx.MakeProgram({"f": lambda x: x})
+    with pytest.raises(KeyError):
+        prog.MakeKernel("nope", 1)
+
+
+def test_async_execution():
+    ctx = Context()
+    prog = ctx.MakeProgram({"f": lambda x: x + 1})
+    b = ctx.MakeBuffer(jnp.float32, Access.read_write, MemoryBank.bank0,
+                       np.zeros(8, np.float32))
+    k = prog.MakeKernel("f", b)
+    fut = k.ExecuteAsync()
+    np.testing.assert_allclose(np.asarray(fut), 1.0)

@@ -1,0 +1,131 @@
+"""F3 dataflow emulation — the paper's §II-C Listings 3/4 reproduced.
+
+The KEY experiment of the reproduction: for cyclic dataflow (Read and
+Write aliasing the same memory), hardware-faithful threaded emulation
+computes fn applied T times; naive sequential emulation computes fn
+applied ONCE — the exact divergence hlslib's DATAFLOW macros fix.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.dataflow import (DataflowContext, DataflowError,
+                                 run_cyclic_dataflow)
+from repro.core.stream import Stream
+
+
+def test_cyclic_dataflow_software_matches_hardware_semantics():
+    mem = list(range(16))
+    run_cyclic_dataflow(mem, lambda v: v + 1, T=5, N=16, mode="software")
+    assert mem == [v + 5 for v in range(16)], \
+        "iteration t must read iteration t-1's writes (paper hardware behavior)"
+
+
+def test_cyclic_dataflow_sequential_diverges():
+    mem = list(range(16))
+    run_cyclic_dataflow(mem, lambda v: v + 1, T=5, N=16, mode="sequential")
+    assert mem == [v + 1 for v in range(16)], \
+        "naive emulation reads stale memory: one application regardless of T"
+
+
+def test_divergence_is_the_papers_claim():
+    """Listing 3's warning, as a single assertion: same program, two
+    execution models, different results."""
+    m1 = list(range(8))
+    m2 = list(range(8))
+    run_cyclic_dataflow(m1, lambda v: 2 * v, T=3, N=8, mode="software")
+    run_cyclic_dataflow(m2, lambda v: 2 * v, T=3, N=8, mode="sequential")
+    assert m1 != m2
+
+
+def test_acyclic_dataflow_same_result_both_modes():
+    """For acyclic graphs the two models must agree (sequential C++
+    emulation is only wrong for cycles)."""
+    def run(mode):
+        src = list(range(32))
+        dst = [0] * 32
+        s0, s1 = Stream(depth=2, name="a"), Stream(depth=2, name="b")
+
+        # streams passed as ARGUMENTS, exactly like the paper's
+        # HLSLIB_DATAFLOW_FUNCTION(Read, mem0, s0) — sequential mode can
+        # only lift the bound of argument streams.
+        def read(src, s0):
+            for v in src:
+                s0.Push(v)
+
+        def compute(s0, s1):
+            for _ in range(32):
+                s1.Push(s0.Pop() * 3)
+
+        def write(s1, dst):
+            for i in range(32):
+                dst[i] = s1.Pop()
+
+        with DataflowContext(mode=mode) as df:
+            df.function(read, src, s0)
+            df.function(compute, s0, s1)
+            df.function(write, s1, dst)
+        return dst
+
+    assert run("software") == run("sequential") == [3 * v for v in range(32)]
+
+
+def test_deadlock_detected_and_named():
+    """A direct PE cycle with bounded channels deadlocks; finalize must
+    time out and name the stuck PE rather than hang forever."""
+    a, b = Stream(depth=1, name="a", warn_seconds=0.1), \
+        Stream(depth=1, name="b", warn_seconds=0.1)
+
+    def pe1():
+        b.Push(a.Pop())          # waits on a — never fed
+
+    def pe2():
+        a.Push(b.Pop())          # waits on b — cycle
+
+    df = DataflowContext(join_timeout=0.3)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        df.function(pe1, name="pe1")
+        df.function(pe2, name="pe2")
+        with pytest.raises(DataflowError, match="did not terminate"):
+            df.finalize()
+    a.close(); b.close()
+
+
+def test_pe_exception_propagates():
+    def bad():
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError, match="boom"):
+        with DataflowContext() as df:
+            df.function(bad)
+
+
+def test_depth_one_enforces_lockstep():
+    """With depth-1 channels a producer can never run more than depth+1
+    elements ahead — the bounded-FIFO synchronization the paper relies
+    on for correct cyclic semantics."""
+    s = Stream(depth=1)
+    max_lead = []
+
+    produced = [0]
+    consumed = [0]
+
+    def produce():
+        for i in range(100):
+            s.Push(i)
+            produced[0] = i
+            max_lead.append(produced[0] - consumed[0])
+
+    def consume():
+        for i in range(100):
+            s.Pop()
+            consumed[0] = i
+
+    with DataflowContext() as df:
+        df.function(produce)
+        df.function(consume)
+    assert max(max_lead) <= 3

@@ -1,0 +1,85 @@
+"""F5 DataPack: typed packing, tile alignment, central-width resize."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import datapack as dp
+
+
+def test_constants():
+    assert dp.LANE == 128 and dp.MXU == 128
+    assert dp.sublanes(jnp.float32) == 8
+    assert dp.sublanes(jnp.bfloat16) == 16
+    assert dp.sublanes(jnp.int8) == 32
+
+
+def test_round_up_and_padding():
+    assert dp.round_up(1, 128) == 128
+    assert dp.round_up(128, 128) == 128
+    assert dp.padded_vocab(50_280) == 51_200          # mamba2 vocab
+    assert dp.padded_vocab(262_144) == 262_144        # gemma3: already 2^18
+    assert dp.padding_waste(50_280, 51_200) == pytest.approx(920 / 51_200)
+
+
+def test_lane_alignment_enforced():
+    with pytest.raises(ValueError):
+        dp.assert_lane_aligned(130)
+    dp.assert_lane_aligned(256, 512)
+    with pytest.raises(ValueError):
+        dp.DataPack.pack(jnp.zeros(8), width=100)     # not lane multiple
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=700),
+       st.sampled_from([128, 256]))
+def test_pack_unpack_roundtrip(n, width):
+    """Property: pack→unpack is the identity for any logical size."""
+    x = jnp.arange(n, dtype=jnp.float32)
+    p = dp.DataPack.pack(x, width=width)
+    assert p.width == width
+    assert p.data.shape[-1] == width
+    np.testing.assert_array_equal(np.asarray(p.unpack()), np.asarray(x))
+
+
+def test_typed_indexing_and_elementwise():
+    x = jnp.arange(256, dtype=jnp.float32)
+    p = dp.DataPack.pack(x, 128)
+    assert p.groups == 2
+    np.testing.assert_array_equal(np.asarray(p[0]), np.asarray(x[:128]))
+    q = (p + p) * 2.0
+    np.testing.assert_allclose(np.asarray(q.unpack()), np.asarray(x * 4))
+    r = p.set(1, jnp.zeros(128))
+    assert float(r[1].sum()) == 0.0
+
+
+def test_width_mismatch_rejected():
+    a = dp.DataPack.pack(jnp.zeros(128), 128)
+    b = dp.DataPack.pack(jnp.zeros(256), 256)
+    with pytest.raises(ValueError):
+        _ = a + b
+
+
+def test_pytree_roundtrip():
+    import jax
+    p = dp.DataPack.pack(jnp.arange(100.0), 128)
+    leaves, tree = jax.tree_util.tree_flatten(p)
+    p2 = jax.tree_util.tree_unflatten(tree, leaves)
+    assert p2.logical == 100
+
+
+def test_block_shape_and_vmem():
+    r, c = dp.block_shape_2d(1000, 300, jnp.float32)
+    assert r % 8 == 0 and c % 128 == 0
+    assert dp.fits_vmem(((128, 128), jnp.float32), ((128, 128), jnp.float32))
+    assert not dp.fits_vmem(((8192, 8192), jnp.float32))
+
+
+def test_central_width_resizes_design():
+    """The paper's 'change one typedef' property: one constant drives
+    vocab padding across every config."""
+    from repro.configs import ARCHS
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab % (16 * dp.LANE) == 0
+        assert cfg.padded_vocab >= cfg.vocab_size

@@ -1,0 +1,185 @@
+"""Per-architecture smoke tests (assignment requirement): reduced
+same-family configs, one forward/train step on CPU, shape + no-NaN
+assertions; plus decode-vs-teacher-forced consistency for representative
+families (the strongest KV-cache/state correctness check)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import smoke_variant
+from repro.models import registry
+
+ARCH_IDS = list(configs.ARCHS)
+
+
+@pytest.fixture(scope="module")
+def smoke(request):
+    return None
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = smoke_variant(configs.get(arch))
+    params = registry.init(cfg, seed=0)
+    b, s = 2, 32
+    batch = registry.make_batch(cfg, "train", b, s)
+    logits = registry.forward(cfg, params, batch, mode="train")
+    Vp = cfg.padded_vocab
+    if cfg.family == "audio":
+        assert logits.shape == (b, s, cfg.n_codebooks, Vp)
+    else:
+        assert logits.shape == (b, s, Vp)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_one_train_step(arch):
+    from repro.train import train_loop as TL, optimizer as OPT
+    cfg = smoke_variant(configs.get(arch))
+    params = registry.init(cfg, seed=0)
+    opt_state = OPT.init(params)
+    step_fn, _, _ = TL.make_train_step(
+        cfg, TL.TrainCfg(opt=OPT.OptCfg(warmup_steps=1, total_steps=10)),
+        mesh=None, donate=False)
+    batch = {k: jnp.asarray(v) for k, v in
+             registry.make_batch(cfg, "train", 2, 32).items()}
+    p2, o2, m = step_fn(params, opt_state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(o2.step) == 1
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "deepseek-v2-lite-16b",
+                                  "mamba2-1p3b", "zamba2-1p2b",
+                                  "gemma3-12b", "musicgen-medium"])
+def test_decode_matches_teacher_forced(arch):
+    """prefill + N greedy decode steps == argmax of the teacher-forced
+    full forward at each position.  Exercises: GQA KV cache, MLA
+    compressed cache, SSM/conv states, sliding-window ring cache,
+    shared-attention cache (zamba2), audio codebooks."""
+    cfg = smoke_variant(configs.get(arch))
+    params = registry.init(cfg, seed=0)
+    b, prompt_len, steps = 1, 8, 4
+    prompt = registry.make_batch(cfg, "prefill", b, prompt_len, seed=3)
+    from repro.serve.serve_loop import greedy_generate
+    gen = greedy_generate(cfg, params, prompt, steps=steps,
+                          max_seq=prompt_len + steps + 2)
+    full = jnp.concatenate([prompt["tokens"], jnp.asarray(gen)], axis=1)
+    batch = dict(prompt)
+    batch["tokens"] = full
+    logits_tf = registry.forward(cfg, params, batch, mode="train")
+    off = cfg.vision_patches if cfg.family == "vlm" else 0
+    for i in range(steps):
+        pos = off + prompt_len - 1 + i
+        pred = np.asarray(jnp.argmax(logits_tf[0, pos], axis=-1))
+        np.testing.assert_array_equal(pred, np.asarray(gen)[0, i],
+                                      err_msg=f"mismatch at step {i}")
+
+
+def test_param_counts_match_published():
+    expect = {
+        "mamba2-1p3b": (1.3e9, 1.6e9),
+        "minitron-4b": (4.0e9, 5.3e9),
+        "qwen1p5-32b": (32e9, 36e9),
+        "gemma3-12b": (11.5e9, 13.5e9),
+        "granite-34b": (32e9, 35e9),
+        "deepseek-v2-lite-16b": (15e9, 16.5e9),
+        "phi3p5-moe-42b": (40e9, 43e9),
+        "zamba2-1p2b": (1.0e9, 1.4e9),
+        "paligemma-3b": (2.5e9, 3.2e9),
+        "musicgen-medium": (1.4e9, 2.0e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = registry.num_params(configs.get(name))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    ds = configs.get("deepseek-v2-lite-16b")
+    phi = configs.get("phi3p5-moe-42b")
+    assert registry.num_active_params(ds) < 0.25 * registry.num_params(ds)
+    assert registry.num_active_params(phi) < 0.25 * registry.num_params(phi)
+
+
+def test_vocab_padding_masked_in_loss():
+    """Padded vocab rows must receive ~zero probability mass."""
+    from repro.train.train_loop import cross_entropy
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    logits = jnp.zeros((2, 4, cfg.padded_vocab))
+    labels = jnp.zeros((2, 4), jnp.int32)
+    loss = cross_entropy(cfg, logits, labels)
+    np.testing.assert_allclose(float(loss), np.log(cfg.vocab_size),
+                               rtol=1e-5)
+
+
+def test_gemma3_window_cache_is_ring(monkeypatch):
+    """Sliding-window decode with a ring cache == full-cache attention
+    restricted to the window (F6 ShiftReg semantics at the cache level)."""
+    cfg = smoke_variant(configs.get("gemma3-12b"))
+    params = registry.init(cfg, 0)
+    b = 1
+    # long prompt relative to the smoke window (16)
+    prompt_len = 24
+    prompt = registry.make_batch(cfg, "prefill", b, prompt_len, seed=5)
+    from repro.serve.serve_loop import greedy_generate
+    gen = greedy_generate(cfg, params, prompt, steps=3,
+                          max_seq=prompt_len + 8)
+    full = jnp.concatenate([prompt["tokens"], jnp.asarray(gen)], axis=1)
+    logits_tf = registry.forward(cfg, params, {"tokens": full}, mode="train")
+    for i in range(3):
+        pred = int(jnp.argmax(logits_tf[0, prompt_len - 1 + i]))
+        assert pred == int(gen[0, i]), f"ring-cache divergence at {i}"
+
+
+# --- MoE dispatch invariants (property) ---------------------------------------------
+
+
+def test_moe_dispatch_invariants():
+    """Every kept token copy lands in exactly one (expert, slot);
+    occupied slots per expert never exceed capacity; with k=1 and no
+    drops, combine(dispatch(x)) recovers a permutation-weighted x."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.models import layers as L
+
+    cfg = dataclasses.replace(
+        smoke_variant(configs.get("phi3p5-moe-42b")),
+        capacity_factor=8.0, top_k=1)
+    params = registry.init(cfg, 0)
+    # pull one layer's MoE params
+    p_moe = jax.tree.map(lambda a: a[0], params["blocks"]["moe"])
+    rng = np.random.default_rng(0)
+    x2 = jnp.asarray(rng.standard_normal((64, cfg.d_model)), jnp.float32)
+    disp, (flat_e, safe_pos, keep, gates) = L._moe_dispatch_combine(
+        cfg, p_moe, x2, jnp.float32)
+    assert bool(keep.all()), "cf=8 must not drop"
+    # one copy per token (k=1): every (e, pos) pair unique
+    pairs = np.stack([np.asarray(flat_e), np.asarray(safe_pos)], 1)
+    assert len({tuple(r) for r in pairs}) == 64
+    # slot occupancy bound
+    for e in range(cfg.n_experts):
+        occ = (np.asarray(flat_e) == e).sum()
+        assert occ <= disp.shape[1]
+    # gather back the dispatched rows: must equal the tokens exactly
+    back = np.asarray(disp)[np.asarray(flat_e), np.asarray(safe_pos)]
+    np.testing.assert_allclose(back, np.asarray(x2), rtol=1e-6)
+
+
+def test_moe_capacity_drops_are_zero_not_garbage():
+    """Dropped tokens must contribute exactly zero to the output."""
+    import dataclasses
+    import jax.numpy as jnp
+    cfg = dataclasses.replace(
+        smoke_variant(configs.get("phi3p5-moe-42b")),
+        capacity_factor=0.05)   # aggressive drops
+    params = registry.init(cfg, 0)
+    batch = registry.make_batch(cfg, "train", 2, 32)
+    logits = registry.forward(cfg, params, batch, mode="train")
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())

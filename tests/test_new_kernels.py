@@ -1,0 +1,62 @@
+"""Validation of the kv-quant and fused-rmsnorm Pallas kernels against
+their oracles (shape/dtype sweeps per the assignment)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.kv_quant import kv_dequantize, kv_quantize
+from repro.kernels.rmsnorm_kernel import rmsnorm as rms_kernel
+from repro.models.layers import _kv_quantize, rmsnorm as rms_ref
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize("rows,d", [(64, 128), (300, 64), (17, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kv_quant_matches_xla_oracle(rows, d, dtype):
+    x = jnp.asarray(RNG.standard_normal((rows, d)) * 3, dtype)
+    q, s = kv_quantize(x, interpret=True)
+    q2, s2 = _kv_quantize(x)
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(q2, np.int32))
+    # fp32 fma ordering can flip exact .5 rounding boundaries by ±1 ulp
+    # on a handful of entries — allow that, nothing more.
+    assert diff.max() <= 1
+    assert (diff != 0).mean() < 0.01
+    np.testing.assert_allclose(np.asarray(s, np.float32),
+                               np.asarray(s2, np.float32), rtol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=200),
+       st.sampled_from([64, 128]))
+def test_kv_quant_roundtrip_bounded_error(rows, d):
+    """Property: symmetric int8 max-abs quantization bounds relative
+    row error by ~1/254 of the row max."""
+    x = jnp.asarray(RNG.standard_normal((rows, d)), jnp.float32)
+    q, s = kv_quantize(x, interpret=True)
+    deq = kv_dequantize(q, s, jnp.float32, interpret=True)
+    row_max = np.abs(np.asarray(x)).max(-1, keepdims=True)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    assert (err <= row_max / 127.0 + 1e-6).all()
+
+
+@pytest.mark.parametrize("rows,d", [(64, 128), (100, 256), (5, 512)])
+def test_rmsnorm_kernel(rows, d):
+    x = jnp.asarray(RNG.standard_normal((rows, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal(d) * 0.1, jnp.float32)
+    got = rms_kernel(x, w, interpret=True)
+    want = rms_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rmsnorm_bf16():
+    x = jnp.asarray(RNG.standard_normal((32, 128)), jnp.bfloat16)
+    w = jnp.zeros(128, jnp.float32)
+    got = rms_kernel(x, w, interpret=True)
+    want = rms_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=1e-2)

@@ -1,0 +1,101 @@
+"""Property tests for the logical-axis sharding rules — the F1 layer
+that every param/cache/batch placement flows through."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (DEFAULT_RULES, spec_for, use_rules,
+                                        zero_shard_spec)
+from repro.models.params import Decl, param_specs
+
+
+def _mesh(shape=(4, 2), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+AXIS_NAMES = [None, "batch", "vocab", "heads", "kv_heads", "ff",
+              "experts", "embed", "kv_seq", "seq_sharded", "stack"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(AXIS_NAMES),
+                          st.integers(min_value=1, max_value=64)),
+                min_size=1, max_size=4))
+def test_specs_always_divide(dims_axes):
+    """Property: whatever logical axes and dims, the produced spec's
+    mesh-axis product divides every dim (the jit argument contract)."""
+    mesh = _mesh()
+    axes = tuple(a for a, _ in dims_axes)
+    shape = tuple(d for _, d in dims_axes)
+    spec = spec_for(axes, mesh, shape)
+    for dim, part in zip(shape, tuple(spec)):
+        if part is None:
+            continue
+        names = (part,) if isinstance(part, str) else part
+        prod = 1
+        for n in names:
+            prod *= mesh.shape[n]
+        assert dim % prod == 0, (axes, shape, spec)
+
+
+def test_axis_not_consumed_when_indivisible():
+    """The qwen-decode regression: a non-divisible dim must not consume
+    the mesh axis; a later dim claims it."""
+    mesh = _mesh((2, 4), ("data", "model"))
+    spec = spec_for(("batch", "kv_heads", "kv_seq", None), mesh,
+                    (8, 6, 32, 128))          # 6 kv heads, model=4
+    assert tuple(spec) == ("data", None, "model", None)
+
+
+def test_no_axis_used_twice():
+    mesh = _mesh((2, 4), ("data", "model"))
+    spec = spec_for(("vocab", "ff"), mesh, (64, 64))
+    flat = []
+    for part in tuple(spec):
+        if part is None:
+            continue
+        flat.extend((part,) if isinstance(part, str) else part)
+    assert len(flat) == len(set(flat))
+
+
+def test_rules_override_context():
+    mesh = _mesh()
+    with use_rules({"ff": None}):
+        assert tuple(spec_for(("ff",), mesh, (64,))) == (None,)
+    assert tuple(spec_for(("ff",), mesh, (64,))) == ("model",)
+
+
+def test_zero_shard_spec():
+    mesh = _mesh((4, 2), ("data", "model"))
+    spec = zero_shard_spec(P(None, "model"), (8, 16), mesh)
+    assert tuple(spec) == ("data", "model")
+    # indivisible first dim: unchanged
+    spec2 = zero_shard_spec(P(None, "model"), (6, 16), mesh)
+    assert tuple(spec2) == (None, "model")
+
+
+def test_gemma3_cache_geometry():
+    """Local layers hold ring caches of window size; global layers hold
+    full-length caches; MLA caches store lora+rope, not heads."""
+    from repro import configs
+    from repro.models import registry
+    g = configs.get("gemma3-12b")
+    cd = registry.cache_decls(g, batch=4, max_seq=32768)
+    leaves = jax.tree_util.tree_flatten_with_path(
+        cd, is_leaf=lambda x: isinstance(x, Decl))[0]
+    shapes = {jax.tree_util.keystr(p): d.shape for p, d in leaves}
+    local_k = [s for k, s in shapes.items() if "local" in k and "'k'" in k]
+    global_k = [s for k, s in shapes.items() if "global" in k and "'k'" in k]
+    assert local_k and local_k[0][-2] == g.sliding_window
+    assert global_k and global_k[0][-2] == 32768
+
+    ds = configs.get("deepseek-v2-lite-16b")
+    cdd = registry.cache_decls(ds, batch=4, max_seq=1024)
+    lv = jax.tree_util.tree_flatten_with_path(
+        cdd, is_leaf=lambda x: isinstance(x, Decl))[0]
+    ckv = [d.shape for p, d in lv if "c_kv" in jax.tree_util.keystr(p)]
+    assert ckv and ckv[0][-1] == ds.kv_lora_rank   # compressed, no heads

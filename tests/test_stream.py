@@ -1,0 +1,106 @@
+"""F4 Stream: bounded FIFO semantics, thread safety, deadlock warnings."""
+
+import threading
+import time
+import warnings
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stream import (Stream, StreamClosed, UnboundedStream,
+                               stream_all)
+
+
+def test_fifo_order():
+    s = Stream(depth=4)
+    for i in range(4):
+        s.Push(i)
+    assert [s.Pop() for _ in range(4)] == [0, 1, 2, 3]
+
+
+def test_bounded_blocks_push():
+    s = Stream(depth=1, warn_seconds=0.05)
+    s.Push(1)
+    with pytest.raises(TimeoutError):
+        s.Push(2, timeout=0.15)
+
+
+def test_push_warns_when_full():
+    s = Stream(depth=1, name="warnme", warn_seconds=0.05)
+    s.Push(0)
+
+    def unblock():
+        time.sleep(0.2)
+        s.Pop()
+
+    t = threading.Thread(target=unblock)
+    t.start()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        s.Push(1)
+    t.join()
+    assert any("warnme" in str(x.message) for x in w), \
+        "blocked Push must warn with the stream name (paper §II-C)"
+
+
+def test_pop_timeout_and_close():
+    s = Stream(depth=2, warn_seconds=0.05)
+    with pytest.raises(TimeoutError):
+        s.Pop(timeout=0.1)
+    s.Push(7)
+    s.close()
+    assert s.Pop() == 7          # drains remaining items
+    with pytest.raises(StreamClosed):
+        s.Pop()
+
+
+def test_stats_track_pipeline_behavior():
+    s = Stream(depth=2)
+    s.Push(1); s.Push(2)
+    s.Pop(); s.Pop()
+    assert s.stats.pushes == 2 and s.stats.pops == 2
+    assert s.stats.max_occupancy == 2
+
+
+def test_try_push_pop():
+    s = Stream(depth=1)
+    assert s.TryPush(1)
+    assert not s.TryPush(2)      # full
+    assert s.TryPop() == 1
+    assert s.TryPop() is None    # empty
+
+
+def test_unbounded_never_full():
+    s = UnboundedStream()
+    for i in range(1000):
+        s.Push(i)
+    assert not s.Full()
+
+
+def test_stream_all():
+    s = stream_all([1, 2, 3])
+    assert [s.Pop() for _ in range(3)] == [1, 2, 3]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(), min_size=1, max_size=200),
+       st.integers(min_value=1, max_value=8))
+def test_concurrent_fifo_preserves_order(items, depth):
+    """Property: producer/consumer through a bounded stream preserves
+    order and loses nothing, for any depth (the hardware-FIFO contract)."""
+    s = Stream(depth=depth)
+    out = []
+
+    def produce():
+        for x in items:
+            s.Push(x)
+
+    def consume():
+        for _ in items:
+            out.append(s.Pop())
+
+    tp, tc = threading.Thread(target=produce), threading.Thread(target=consume)
+    tp.start(); tc.start()
+    tp.join(5); tc.join(5)
+    assert out == items
+    assert s.stats.max_occupancy <= depth
