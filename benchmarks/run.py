@@ -13,15 +13,27 @@ Run: PYTHONPATH=src python -m benchmarks.run
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Smoke mode (scripts/ci.sh): fewer iterations, same coverage.
+SMOKE = False
+
+# All rows accumulate here; main() dumps them to BENCH_serve.json so
+# future PRs have a machine-readable perf trajectory to diff against.
+RESULTS: Dict[str, Dict[str, object]] = {}
+
 
 def timeit(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
+    if SMOKE:
+        iters, warmup = max(2, iters // 5), 1
     for _ in range(warmup):
         jax.block_until_ready(fn())
     t0 = time.perf_counter()
@@ -32,6 +44,7 @@ def timeit(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
 
 
 def row(name: str, us: float, derived: str = "") -> None:
+    RESULTS[name] = {"us_per_call": round(us, 1), "derived": derived}
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -209,40 +222,159 @@ def bench_train_step():
 
 
 def bench_decode_step():
+    """Serving decode step.  ``decode_step_smoke`` is the fast path
+    (fused on-device sampling -> int32 tokens out, 4 bytes/slot host
+    transfer); ``decode_step_logits`` is the seed raw-logits step kept
+    for comparison (full vocab row to host per call)."""
     from repro import configs
     from repro.configs.base import smoke_variant
     from repro.models import registry
-    from repro.serve.serve_loop import make_serve_steps
+    from repro.serve.serve_loop import (make_serve_steps,
+                                        make_sampling_serve_steps)
     cfg = smoke_variant(configs.get("minitron-4b"))
     params = registry.init(cfg, 0)
-    pre, dec, _, _ = make_serve_steps(cfg, batch=8, max_seq=128)
     batch = registry.make_batch(cfg, "prefill", 8, 64)
-    logits, cache = pre(params, batch)
     tok = registry.make_batch(cfg, "decode", 8, 64)
+
+    # seed path: logits out, host argmax would follow.
+    pre, dec, _, _ = make_serve_steps(cfg, batch=8, max_seq=128)
+    logits, cache = pre(params, batch)
     state = {"cache": cache}
 
-    def step():
+    def step_logits():
         logits, state["cache"] = dec(params, state["cache"], tok,
                                      jnp.int32(64))
-        return logits
+        return np.argmax(np.asarray(logits[:, -1]), axis=-1)
 
-    us = timeit(step, iters=10)
-    row("decode_step_smoke", us, f"tokens_per_s={8 / us * 1e6:.0f}")
+    us_logits = timeit(step_logits, iters=100)
+    row("decode_step_logits", us_logits,
+        f"tokens_per_s={8 / us_logits * 1e6:.0f};host_bytes_per_tok="
+        f"{4 * cfg.padded_vocab}")
+
+    # fast path: sampling fused into the jitted step, int32 tokens out.
+    fpre, fdec = make_sampling_serve_steps(cfg, 8, 128)
+    key = jax.random.key(0)
+    ntok, fcache = fpre(params, batch, jnp.full((8,), 63, jnp.int32), key)
+    fstate = {"cache": fcache, "tok": ntok}
+
+    def step_fused():
+        t, fstate["cache"] = fdec(params, fstate["cache"],
+                                  {"tokens": fstate["tok"].reshape(8, 1)},
+                                  jnp.int32(64), key)
+        fstate["tok"] = t
+        return t
+
+    us = timeit(step_fused, iters=100)
+    row("decode_step_smoke", us,
+        f"tokens_per_s={8 / us * 1e6:.0f};host_bytes_per_tok=4;"
+        f"speedup_vs_logits={us_logits / us:.2f}x")
 
 
-def main() -> None:
+def bench_batcher_throughput():
+    """End-to-end continuous batching: N requests through the
+    device-resident batcher (admission + decode + retire)."""
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    import threading
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    rng = np.random.default_rng(0)
+    n_req, max_new = (4, 4) if SMOKE else (12, 8)
+    bat = ContinuousBatcher(cfg, params, n_slots=4, max_seq=64)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 17))
+                                        ).astype(np.int32),
+                    max_new=max_new)
+            for i in range(n_req)]
+    # producer PE: the bounded request FIFO must be fed concurrently.
+    prod = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+    t0 = time.perf_counter()
+    prod.start()
+    bat.run(n_req)
+    prod.join()
+    dt = time.perf_counter() - t0
+    total = sum(len(drain(r)) for r in reqs)
+    row("batcher_throughput", dt / max(bat.steps, 1) * 1e6,
+        f"tok_per_s={total / dt:.0f};steps={bat.steps};"
+        f"host_bytes_per_step={8 * bat.n_slots};"
+        f"prefill_compiles={bat.prefill_compiles}")
+
+
+def bench_prefill_bucketed():
+    """Bucketed admission: arbitrary prompt lengths share log2(max_seq)
+    compiled prefill programs; the derived column records the compile
+    count vs the number of distinct lengths served."""
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    import threading
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    rng = np.random.default_rng(1)
+    lengths = [3, 5, 9, 13] if SMOKE else [3, 5, 7, 9, 13, 17, 25, 33, 49]
+    bat = ContinuousBatcher(cfg, params, n_slots=2, max_seq=64)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, L).astype(np.int32), max_new=2)
+        for i, L in enumerate(lengths)]
+    prod = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+    t0 = time.perf_counter()
+    prod.start()
+    bat.run(len(reqs))
+    prod.join()
+    dt = time.perf_counter() - t0
+    for r in reqs:
+        drain(r)
+    row("prefill_bucketed", dt / len(lengths) * 1e6,
+        f"distinct_lengths={len(set(lengths))};"
+        f"prefill_compiles={bat.prefill_compiles};"
+        f"compile_bound=log2(64)={int(np.log2(64))}")
+
+
+# Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
+# workloads (fewer requests/lengths), so they write a separate
+# BENCH_serve_smoke.json — only same-mode snapshots are diffable.
+SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
+              "batcher_throughput", "prefill_bucketed")
+
+
+def main(argv=None) -> None:
+    global SMOKE
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer iterations (CI)")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve-path benches only")
+    args = ap.parse_args(argv)
+    SMOKE = args.smoke
+
     print("name,us_per_call,derived")
-    bench_stream()
-    bench_dataflow_emulation()
-    bench_datapack()
-    bench_stencil()
-    bench_treereduce()
-    bench_attention()
-    bench_ssd()
-    bench_kv_quant()
-    bench_rmsnorm()
-    bench_train_step()
+    if not args.serve:
+        bench_stream()
+        bench_dataflow_emulation()
+        bench_datapack()
+        bench_stencil()
+        bench_treereduce()
+        bench_attention()
+        bench_ssd()
+        bench_kv_quant()
+        bench_rmsnorm()
+        bench_train_step()
     bench_decode_step()
+    bench_batcher_throughput()
+    bench_prefill_bucketed()
+
+    out_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_serve_smoke.json" if SMOKE else "BENCH_serve.json")
+    payload = {k: RESULTS[k] for k in SERVE_ROWS if k in RESULTS}
+    payload["_meta"] = {"smoke": SMOKE}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_path}", flush=True)
 
 
 if __name__ == "__main__":

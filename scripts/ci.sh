@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verification + serve-path benchmarks in smoke mode.
+# Usage: scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Known-failing on the pinned jax==0.4.37 (the subprocess tests target
+# jax>=0.5 APIs: jax.sharding.AxisType / set_mesh — see ROADMAP open
+# items).  test_distributed.py is excluded wholesale: its multi-device
+# subprocess tests are additionally load-flaky under CI.
+python -m pytest -x -q \
+    --ignore=tests/test_distributed.py \
+    --deselect "tests/test_context.py::test_listing2_flow" \
+    --deselect "tests/test_context.py::test_kernel_introspection" \
+    --deselect "tests/test_context.py::test_async_execution" \
+    --deselect "tests/test_perf_flags.py::test_seq_sharded_int8_decode_distributed" \
+    --deselect "tests/test_roofline.py::test_collective_bytes_counted" \
+    --deselect "tests/test_system.py::test_dryrun_machinery_small_mesh"
+
+# Serving fast-path benches (smoke): writes benchmarks/BENCH_serve_smoke.json
+# so every CI run leaves a machine-readable perf snapshot behind without
+# clobbering the committed full-run BENCH_serve.json trajectory.
+python -m benchmarks.run --smoke --serve

@@ -83,6 +83,7 @@ class ModelConfig:
     attn_p_bf16: bool = False         # beyond-paper: bf16 probs into PV matmul
     moe_groups: int = 0               # beyond-paper: grouped dispatch (DPxEP)
     decode_seq_shard: bool = False    # beyond-paper: shard decode KV over seq
+    decode_flash: bool = False        # beyond-paper: sq=1 flash decode kernel
     kv_cache_dtype: str = "bfloat16"  # beyond-paper: "int8" quantized KV
     embed_std: float = 0.02
 

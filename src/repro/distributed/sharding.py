@@ -65,8 +65,20 @@ def use_rules(overrides: Optional[Rules] = None, **kw):
         _rules_var.reset(token)
 
 
+def _thread_local_mesh() -> Optional[Mesh]:
+    """Fallback for jax versions without ``jax.sharding.get_abstract_mesh``
+    (absent in 0.4.x): the ``with Mesh(...)`` context manager stores the
+    active mesh in jax's thread-local resource env."""
+    try:
+        from jax._src import mesh as _jmesh
+        return _jmesh.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+
+
 def current_mesh() -> Optional[Mesh]:
-    m = jax.sharding.get_abstract_mesh()
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    m = getter() if getter is not None else _thread_local_mesh()
     if m is None or m.empty:
         return None
     return m

@@ -164,3 +164,156 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     out = out.reshape(b, hq, sq_pad, d)
     return out[:, :, :sq, :]
+
+
+# --- decode-specialized entry point (sq == 1 fast path) -------------------------------
+#
+# Serving decode attends ONE query per sequence against a long cache; the
+# general kernel above would spend its q_blocks grid dim on a single
+# (padded) row.  The decode kernel instead:
+#
+# * uses a kv-only grid (b·hkv, kv_blocks) — the sequential kv dim still
+#   carries the online-softmax state in VMEM scratch;
+# * shares kv heads across the GQA group WITHOUT materializing the
+#   broadcast: the q block holds the whole group (group, d), so k/v are
+#   fetched once per kv head and hit every query head in the group;
+# * skips kv blocks that cannot contribute (entirely in the future, or
+#   entirely outside the sliding window) via ``pl.when`` on the
+#   scalar-prefetched position — the block-skipping analogue of the
+#   static tap-skipping in the prefill kernel, but driven by the decode
+#   position that is known before the grid step runs.
+
+
+def _flash_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                         acc_scr, *, scale: float, window: Optional[int],
+                         ring: bool, block_k: int, kv_len: int, hkv: int):
+    i = pl.program_id(0)
+    jk = pl.program_id(1)
+    nk = pl.num_programs(1)
+    pos = pos_ref[i // hkv]
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = jk * block_k
+    if ring:
+        # ring layout: once pos >= window every slot is live, so only the
+        # warm-up phase (pos < window) can skip future blocks.
+        active = (k_start <= pos) | (pos >= window)
+    else:
+        active = k_start <= pos                     # skip future blocks
+        if window is not None:
+            active &= k_start + block_k - 1 > pos - window  # out-of-window
+
+    @pl.when(active)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (group, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (group, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < kv_len
+        if ring:
+            valid &= (kpos <= pos) | (pos >= window)
+        else:
+            valid &= kpos <= pos
+            if window is not None:
+                valid &= kpos > pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           pos: jnp.ndarray,
+                           window: Optional[int] = None,
+                           ring: bool = False,
+                           scale: Optional[float] = None,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Single-step (sq == 1) decode attention over a KV cache.
+
+    q: (b, hq, 1, d); k, v: (b, hkv, S, d); ``pos``: int32 scalar or (b,)
+    — the position being decoded (cache entries <= pos are live).
+
+    ``ring=True`` means k/v use the rolling ring layout of sliding-window
+    caches (slot = position % window, S == window): every slot is valid
+    once pos >= window.  ``ring=False`` with ``window`` applies the usual
+    (pos - window, pos] band.  Returns (b, hq, 1, d).
+    """
+    b, hq, sq, d = q.shape
+    if sq != 1:
+        raise ValueError(f"decode fast path requires sq == 1, got {sq}")
+    _, hkv, S, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    if ring and window is None:
+        raise ValueError("ring layout requires a window size")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    block_k = min(block_k, S)
+    S_pad = datapack.round_up(S, block_k)
+    if S_pad != S:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+
+    bh = b * hkv
+    # group dim folded into the q block: kv fetched once per kv head.
+    q3 = q[:, :, 0, :].reshape(b, hkv, group, d).reshape(bh, group, d)
+    k3 = k.reshape(bh, S_pad, d)
+    v3 = v.reshape(bh, S_pad, d)
+    pos_arr = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+
+    kernel = functools.partial(
+        _flash_decode_kernel, scale=scale, window=window, ring=ring,
+        block_k=block_k, kv_len=S, hkv=hkv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, S_pad // block_k),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda i, kk, pos_ref: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, kk, pos_ref: (i, kk, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, kk, pos_ref: (i, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d),
+                               lambda i, kk, pos_ref: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, group, d), q.dtype),
+        interpret=interpret,
+    )(pos_arr, q3, k3, v3)
+
+    return out.reshape(b, hq, d)[:, :, None, :]

@@ -449,7 +449,17 @@ def attention_apply(cfg, p, x, *, window: Optional[int] = None,
                                                  slot, 2)
             k_full, v_full = ck.astype(q.dtype), cv.astype(q.dtype)
             new_cache = {"k": ck, "v": cv}
-        o = attention_decode(q, k_full, v_full, valid)
+        if cfg.decode_flash:
+            # sq=1 flash fast path: kv-only grid, GQA group folded into
+            # the q block, out-of-window/future kv blocks skipped.  Ring
+            # layout iff the cache is the rolled sliding-window buffer.
+            from ..kernels.flash_attention import flash_attention_decode
+            ring = window is not None and S == window
+            o = flash_attention_decode(q, k_full, v_full, pos,
+                                       window=window if ring else None,
+                                       ring=ring)
+        else:
+            o = attention_decode(q, k_full, v_full, valid)
     y = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
     y = y @ p["wo"]
     y = constrain(y, "batch", None, "embed")

@@ -442,9 +442,16 @@ def _scan_blocks(cfg, apply, blocks_p, x, cache, pos, mode, cache_len):
 
 def forward(cfg, params, batch, mode: str = "train",
             cache: Optional[Any] = None, pos: Optional[jnp.ndarray] = None,
-            cache_len: Optional[int] = None):
+            cache_len: Optional[int] = None,
+            last_pos: Optional[jnp.ndarray] = None):
     """train -> logits (b, s, Vp); prefill -> (last logits, cache);
-    decode -> (logits (b, 1, Vp), new cache)."""
+    decode -> (logits (b, 1, Vp), new cache).
+
+    ``last_pos`` (prefill only): (b,) int32 per-sequence index of the true
+    last token.  Bucketed serving right-pads prompts to a power-of-two
+    length; the returned logits are then gathered at ``last_pos`` instead
+    of the (padded) final position.  Causality guarantees the padding
+    cannot influence positions <= last_pos."""
     dtype = jnp.dtype(cfg.dtype)
     params = jax.tree.map(
         lambda p: p.astype(dtype)
@@ -521,7 +528,11 @@ def forward(cfg, params, batch, mode: str = "train",
 
     x = L.rmsnorm(x, params["final_norm"])
     if mode == "prefill":
-        x = x[:, -1:]
+        if last_pos is not None:
+            idx = last_pos.astype(jnp.int32)[:, None, None]
+            x = jnp.take_along_axis(x, idx, axis=1)
+        else:
+            x = x[:, -1:]
     if cfg.family == "audio":
         logits = jnp.einsum("bsd,kdv->bskv", x, params["unembed"])
     else:

@@ -1,18 +1,39 @@
 """Continuous batching built on tpulib Streams (F4) + dataflow (F3).
 
 Requests arrive on a bounded ``Stream`` (the hlslib FIFO); the batcher PE
-packs them into fixed slots, decodes all active slots together (per-slot
-positions via ``vmap`` over a single-sequence decode), and retires
-finished sequences into per-request output streams, immediately reusing
-the slot — continuous batching.  Producer/batcher/consumer is exactly
-the paper's Read/Compute/Write dataflow and runs under
+packs them into fixed slots, decodes all active slots together, and
+retires finished sequences into per-request output streams, immediately
+reusing the slot — continuous batching.  Producer/batcher/consumer is
+exactly the paper's Read/Compute/Write dataflow and runs under
 ``DataflowContext`` in ``examples/serve_lm.py``.
+
+Serving fast path (device-resident slot state)
+----------------------------------------------
+Following the paper's principle that the hot loop must never leave the
+pipeline, all per-slot decode state — ``last_tok``, ``pos``,
+``remaining``, and the active mask — lives in device arrays.  One
+*donated* jitted call advances every slot per step: it decodes all slots
+(inactive ones masked), samples the next token on device (argmax fused
+into the step, so logits never materialize on the host), detects finished
+sequences on device, and returns a single small ``(2, n_slots)`` int32
+array (next token + finished flag per slot).  That vector is the ONLY
+per-step device->host transfer: 8 bytes/slot instead of a vocab row.
+
+Admission is *bucketed* and *batched*: prompts are right-padded to
+power-of-two buckets and up to ``n_slots`` pending requests prefill in a
+single padded (vmapped) call, with the resulting caches scattered into
+their slots on device (out-of-range rows dropped).  The jitted admission
+function is cached per bucket with an LRU bound, so arbitrary prompt
+lengths cost at most ``log2(max_seq)`` prefill compilations.  For
+sliding-window configs a bucket larger than the window would corrupt the
+ring-cache layout, so those prompts fall back to exact-length prefill.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +43,72 @@ from ..configs.base import ModelConfig
 from ..core.stream import Stream, StreamClosed
 from ..models import registry
 from ..models import params as PP
+
+_MIN_BUCKET = 8            # smallest prefill bucket (pad-to-power-of-two)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+@functools.lru_cache(maxsize=32)
+def _make_step_fn(cfg: ModelConfig, max_seq: int) -> Callable:
+    """Donated jitted decode step over all slots (shared across batcher
+    instances with the same model/max_seq — ``ModelConfig`` is frozen and
+    hashable, so the compiled program is reused)."""
+    i32 = jnp.int32
+
+    def step_fn(params, cache, last_tok, pos, remaining, active):
+        def decode_one(cache1, tok, p):
+            logits, cache1 = registry.forward(
+                cfg, params, {"tokens": tok[None, None]}, mode="decode",
+                cache=cache1, pos=p)
+            return jnp.argmax(logits[0, -1], -1).astype(i32), cache1
+
+        nxt, cache = jax.vmap(decode_one)(cache, last_tok, pos)
+        nxt = jnp.where(active, nxt, last_tok)
+        pos = jnp.where(active, pos + 1, pos)
+        remaining = jnp.where(active, remaining - 1, remaining)
+        finished = active & ((remaining <= 0) | (pos >= max_seq - 1))
+        active = active & ~finished
+        out = jnp.stack([nxt, finished.astype(i32)])   # (2, n_slots)
+        return cache, nxt, pos, remaining, active, out
+
+    # donate cache + all state vectors: the step is a pure in-place
+    # pipeline stage; nothing round-trips through the host.
+    return jax.jit(step_fn, donate_argnums=(1, 2, 3, 4, 5))
+
+
+@functools.lru_cache(maxsize=64)
+def _make_admit_fn(cfg: ModelConfig, max_seq: int, n_slots: int,
+                   bucket: int) -> Callable:
+    """Jitted batched-prefill + scatter for one bucket length."""
+    i32 = jnp.int32
+
+    def admit_fn(params, cache, last_tok, pos, remaining, active,
+                 prompts, lens, slot_idx, max_new):
+        # One padded call for all rows: vmap of single-sequence prefill
+        # gives every cache leaf a leading row axis that scatters
+        # straight into the slot axis.
+        def prefill_one(prompt, last_p):
+            logits, c1 = registry.forward(
+                cfg, params, {"tokens": prompt[None]}, mode="prefill",
+                cache_len=max_seq, last_pos=last_p[None])
+            return jnp.argmax(logits[0, -1], -1).astype(i32), c1
+
+        tok0, cache1 = jax.vmap(prefill_one)(prompts, lens - 1)
+        # rows for free capacity carry slot_idx == n_slots -> dropped.
+        cache = jax.tree.map(
+            lambda c, c1: c.at[slot_idx].set(c1, mode="drop"),
+            cache, cache1)
+        last_tok = last_tok.at[slot_idx].set(tok0, mode="drop")
+        pos = pos.at[slot_idx].set(lens, mode="drop")
+        remaining = remaining.at[slot_idx].set(max_new - 1, mode="drop")
+        alive = (max_new > 1) & (lens < max_seq - 1)
+        active = active.at[slot_idx].set(alive, mode="drop")
+        return cache, last_tok, pos, remaining, active, tok0
+
+    return jax.jit(admit_fn, donate_argnums=(1, 2, 3, 4, 5))
 
 
 @dataclasses.dataclass
@@ -33,16 +120,13 @@ class Request:
         default_factory=lambda: Stream(depth=4096, name="resp"))
 
 
-@dataclasses.dataclass
-class _Slot:
-    req: Optional[Request] = None
-    pos: int = 0
-    remaining: int = 0
-    last_tok: int = 0
-
-
 class ContinuousBatcher:
-    """Fixed-slot continuous batcher over vmapped single-sequence decode."""
+    """Fixed-slot continuous batcher with device-resident slot state.
+
+    The host keeps only the slot -> ``Request`` mapping (needed to route
+    retired tokens to per-request output streams); everything the decode
+    loop reads or writes stays on device across steps.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
                  max_seq: int):
@@ -51,96 +135,191 @@ class ContinuousBatcher:
         self.cfg, self.params = cfg, params
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.slots = [_Slot() for _ in range(n_slots)]
         self.requests: Stream = Stream(depth=2 * n_slots, name="requests")
         self.steps = 0
         self.retired = 0
+        self.prefill_compiles = 0
+
+        # host mirror: which Request occupies each slot (None = free).
+        self._slot_req: List[Optional[Request]] = [None] * n_slots
+
+        # device-resident slot state.
+        i32 = jnp.int32
+        self.last_tok = jnp.zeros((n_slots,), i32)
+        self.pos = jnp.zeros((n_slots,), i32)
+        self.remaining = jnp.zeros((n_slots,), i32)
+        self.active = jnp.zeros((n_slots,), bool)
 
         cache_d = registry.cache_decls(cfg, 1, max_seq)
         one = PP.init_params(cache_d)  # zeros (init=zeros decls)
         self.cache = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_slots,) + a.shape).copy(), one)
 
-        def decode_one(params, cache, tok, pos):
-            logits, cache = registry.forward(
-                cfg, params, {"tokens": tok[None, None]}, mode="decode",
-                cache=cache, pos=pos)
-            return logits[0, -1], cache
+        self._step = _make_step_fn(cfg, max_seq)
 
-        self._decode = jax.jit(jax.vmap(decode_one, in_axes=(None, 0, 0, 0)))
+    # -- bucketed admission ---------------------------------------------------------
 
-        def prefill_one(params, prompt):
-            logits, cache = registry.forward(
-                cfg, params, {"tokens": prompt[None]}, mode="prefill",
-                cache_len=max_seq)
-            return logits[0, -1], cache
+    def _bucket_for(self, plen: int) -> int:
+        """Pad-to-power-of-two bucket for a prompt length.
 
-        self._prefill = jax.jit(prefill_one)
+        Two exact-length fallbacks (correctness over compile reuse):
+        * sliding-window configs use ring caches of size ``window``; a
+          padded prefill longer than the window would place padding
+          garbage in live ring slots;
+        * recurrent families (ssm/hybrid) reduce conv/ssd state over the
+          WHOLE padded sequence — padding tokens would corrupt the state
+          itself, which no ``last_pos`` gather can fix (attention caches
+          are safe: padded positions are masked or overwritten before
+          they are ever read)."""
+        if self.cfg.family in ("ssm", "hybrid"):
+            return plen
+        b = min(max(_MIN_BUCKET, _next_pow2(plen)), self.max_seq)
+        w = self.cfg.sliding_window
+        if w is not None and b > w:
+            return plen
+        return b
+
+    def _admit_fn(self, bucket: int) -> Callable:
+        """Per-bucket jitted admission program.  The LRU bound lives on
+        the module-level ``_make_admit_fn`` cache; ``prefill_compiles``
+        counts actual factory misses (each product traces exactly once,
+        since its input shapes are fixed by the bucket), so the metric
+        reflects real XLA compilations, not per-instance lookups."""
+        before = _make_admit_fn.cache_info().misses
+        fn = _make_admit_fn(self.cfg, self.max_seq, self.n_slots, bucket)
+        if _make_admit_fn.cache_info().misses > before:
+            self.prefill_compiles += 1
+        return fn
+
+    def _admit_batch(self, pairs: Sequence[Tuple[int, Request]]) -> None:
+        """Admit (slot, request) pairs; one padded prefill per bucket.
+
+        Every admission call runs at a fixed n_slots rows (unused rows
+        are zero prompts whose results scatter-drop): one compiled shape
+        per bucket keeps the log2(max_seq) compile bound, at the cost of
+        up to (n_slots-1)/n_slots wasted prefill FLOPs when admitting a
+        single request.  Fine at demo slot counts; chunked prefill
+        (ROADMAP) is the real fix at large n_slots."""
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot, r in pairs:
+            if len(r.prompt) >= self.max_seq:
+                # bypassed submit() validation (direct Push): reject just
+                # this request — close its stream so its consumer ends —
+                # instead of raising inside the batcher PE.
+                r.out.close()
+                self.retired += 1
+                continue
+            groups.setdefault(self._bucket_for(len(r.prompt)),
+                              []).append((slot, r))
+        for bucket, grp in groups.items():
+            fn = self._admit_fn(bucket)
+            prompts = np.zeros((self.n_slots, bucket), np.int32)
+            lens = np.ones((self.n_slots,), np.int32)
+            slot_idx = np.full((self.n_slots,), self.n_slots, np.int32)
+            max_new = np.ones((self.n_slots,), np.int32)
+            for row, (slot, r) in enumerate(grp):
+                p = np.asarray(r.prompt, np.int32)
+                prompts[row, :len(p)] = p
+                lens[row] = len(p)
+                slot_idx[row] = slot
+                max_new[row] = r.max_new
+            (self.cache, self.last_tok, self.pos, self.remaining,
+             self.active, tok0) = fn(
+                self.params, self.cache, self.last_tok, self.pos,
+                self.remaining, self.active, jnp.asarray(prompts),
+                jnp.asarray(lens), jnp.asarray(slot_idx),
+                jnp.asarray(max_new))
+            tok0 = np.asarray(tok0)           # (n_slots,) int32
+            for row, (slot, r) in enumerate(grp):
+                r.out.Push(int(tok0[row]))
+                if r.max_new > 1 and len(r.prompt) < self.max_seq - 1:
+                    self._slot_req[slot] = r
+                else:                          # retired at admission
+                    r.out.close()
+                    self.retired += 1
 
     # -- scheduling ---------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        """Validate + enqueue: oversized prompts are rejected HERE, in
+        the producer's thread, so one bad request can't kill the batcher
+        PE mid-flight with other requests in its slots."""
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} >= "
+                f"max_seq {self.max_seq}")
         self.requests.Push(req)
 
-    def _admit_one(self, slot_idx: int, r: Request) -> None:
-        logits, cache1 = self._prefill(self.params, jnp.asarray(r.prompt))
-        self.cache = jax.tree.map(
-            lambda c, c1: c.at[slot_idx].set(c1), self.cache, cache1)
-        tok = int(np.argmax(np.asarray(logits)))
-        r.out.Push(tok)
-        self.slots[slot_idx] = _Slot(req=r, pos=len(r.prompt),
-                                     remaining=r.max_new - 1, last_tok=tok)
-
     def admit(self) -> int:
-        n = 0
-        for i, slot in enumerate(self.slots):
-            if slot.req is None:
-                r = self.requests.TryPop()
-                if r is None:
-                    break
-                self._admit_one(i, r)
-                n += 1
-        return n
+        """Fill free slots from the request stream (batched prefill)."""
+        free = [i for i, r in enumerate(self._slot_req) if r is None]
+        pairs: List[Tuple[int, Request]] = []
+        for slot in free:
+            r = self.requests.TryPop()
+            if r is None:
+                break
+            pairs.append((slot, r))
+        if pairs:
+            self._admit_batch(pairs)
+        return len(pairs)
 
     def step(self) -> int:
         """One batched decode step; returns number of sequences retired."""
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active:
+        if all(r is None for r in self._slot_req):
             return 0
-        toks = jnp.asarray([s.last_tok for s in self.slots], jnp.int32)
-        pos = jnp.asarray([s.pos for s in self.slots], jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        logits = np.asarray(logits)
+        (self.cache, self.last_tok, self.pos, self.remaining, self.active,
+         out) = self._step(self.params, self.cache, self.last_tok, self.pos,
+                           self.remaining, self.active)
+        out = np.asarray(out)                  # the ONLY per-step transfer
+        toks, finished = out[0], out[1]
         done = 0
-        for i in active:
-            s = self.slots[i]
-            nxt = int(np.argmax(logits[i]))
-            s.req.out.Push(nxt)
-            s.last_tok = nxt
-            s.pos += 1
-            s.remaining -= 1
-            if s.remaining <= 0 or s.pos >= self.max_seq - 1:
-                s.req.out.close()
-                self.slots[i] = _Slot()
+        for i, r in enumerate(self._slot_req):
+            if r is None:
+                continue
+            r.out.Push(int(toks[i]))
+            if finished[i]:
+                r.out.close()
+                self._slot_req[i] = None
                 done += 1
         self.steps += 1
         self.retired += done
         return done
 
-    def run(self, total_requests: int) -> None:
-        """Batcher PE: admit + decode until ``total_requests`` retire."""
+    def run(self, total_requests: int, *, poll_timeout: float = 1.0) -> None:
+        """Batcher PE: admit + decode until ``total_requests`` retire.
+
+        When every slot is idle the batcher blocks on the request stream
+        with a timeout + re-check loop (never an unbounded ``Pop``): if a
+        producer dies without closing the stream, the batcher keeps
+        polling instead of deadlocking, and a closed stream ends the
+        loop cleanly."""
         while self.retired < total_requests:
-            if self.admit() == 0 and all(s.req is None for s in self.slots):
-                self._admit_one(0, self.requests.Pop())   # block for work
+            self.admit()
+            if all(r is None for r in self._slot_req):
+                try:
+                    r = self.requests.Pop(timeout=poll_timeout)
+                except TimeoutError:
+                    continue                   # re-check; producer may be slow
+                except StreamClosed:
+                    return                     # no more work will ever arrive
+                self._admit_batch([(0, r)])
+                continue
             self.step()
 
 
-def drain(req: Request) -> List[int]:
-    """Consumer PE helper: collect a request's full output stream."""
+def drain(req: Request, timeout: float = 30.0) -> List[int]:
+    """Consumer PE helper: collect a request's full output stream.
+
+    ``StreamClosed`` is the normal end-of-sequence signal; a timeout means
+    the batcher stalled and is reported to the caller instead of being
+    silently swallowed as an empty/short result."""
     out: List[int] = []
     while True:
         try:
-            out.append(req.out.Pop(timeout=30))
-        except (StreamClosed, TimeoutError):
-            break
-    return out
+            out.append(req.out.Pop(timeout=timeout))
+        except StreamClosed:
+            return out
+        except TimeoutError:
+            raise TimeoutError(
+                f"drain(rid={req.rid}) timed out after {timeout:.0f}s with "
+                f"{len(out)} token(s) received — batcher stalled or died")

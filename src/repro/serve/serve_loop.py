@@ -9,6 +9,16 @@ lowers for the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells:
 Caches are declarative (``registry.cache_decls``) so shardings come from
 the same logical-axis rules as parameters — the MLA compressed cache and
 the sliding-window ring caches are just different Decl trees.
+
+Serving fast path (hlslib-style: keep the hot loop inside the pipeline):
+``make_sampling_serve_steps`` fuses token *sampling* into the jitted
+steps, so each call returns int32 token ids instead of a full vocab row
+of logits.  The per-token device->host transfer drops from
+``4·vocab`` bytes/slot to 4 bytes/slot, and XLA is free to fuse the
+unembed matmul with the argmax/categorical reduction — the logits never
+materialize in host memory at all.  ``greedy_generate`` drives this fused
+path; the raw-logits builders remain for the dry-run and for callers that
+post-process distributions.
 """
 
 from __future__ import annotations
@@ -67,33 +77,82 @@ def make_serve_steps(cfg: ModelConfig, batch: int, max_seq: int,
     return pre, dec, ab_cache, (ns(p_specs), ns(c_specs))
 
 
+def _sample_last(logits_last: jnp.ndarray, key, temperature: float
+                 ) -> jnp.ndarray:
+    """On-device sampling of the last-position logits.
+
+    logits_last: (b, Vp) or (b, K, Vp) for the audio family.  Static
+    ``temperature``: 0 -> argmax (key unused, DCE'd by jit); > 0 ->
+    temperature-scaled categorical.
+    """
+    if temperature > 0:
+        return jax.random.categorical(
+            key, logits_last / temperature).astype(jnp.int32)
+    return jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=32)
+def make_sampling_serve_steps(cfg: ModelConfig, batch: int, max_seq: int,
+                              temperature: float = 0.0):
+    """Fused sample-in-decode step builders (the serving fast path).
+
+    * ``prefill(params, batch_in, last_pos, key)`` -> (tokens, cache)
+    * ``decode(params, cache, tokens, pos, key)``  -> (tokens, cache)
+
+    Both return int32 token ids (shape (b,), or (b, K) for audio) — not
+    logits — so the only per-step host transfer is a small int vector.
+    ``last_pos`` is the per-sequence index of the true last prompt token,
+    enabling right-padded (bucketed) prompts.  The decode step donates the
+    cache so slot state stays device-resident with no copies.
+
+    Builders are lru_cached by (cfg, batch, max_seq, temperature): driving
+    many generations against one model reuses the same compiled steps.
+    """
+
+    def prefill(params, batch_in, last_pos, key):
+        logits, cache = registry.forward(cfg, params, batch_in,
+                                         mode="prefill", cache_len=max_seq,
+                                         last_pos=last_pos)
+        return _sample_last(logits[:, -1], key, temperature), cache
+
+    def decode(params, cache, tokens, pos, key):
+        batch_in = dict(tokens)
+        logits, cache = registry.forward(cfg, params, batch_in,
+                                         mode="decode", cache=cache, pos=pos)
+        return _sample_last(logits[:, -1], key, temperature), cache
+
+    return (jax.jit(prefill), jax.jit(decode, donate_argnums=(1,)))
+
+
 def greedy_generate(cfg: ModelConfig, params, prompt_batch: Dict,
                     steps: int, max_seq: int, temperature: float = 0.0,
                     seed: int = 0):
-    """CPU-runnable generation driver (examples + integration tests)."""
+    """CPU-runnable generation driver (examples + integration tests).
+
+    Runs on the fused sample-in-decode fast path: every jitted call
+    returns int32 token ids, so the host never sees a logits row."""
     tok = prompt_batch["tokens"]
     b = tok.shape[0]
     prompt_len = tok.shape[1] + (cfg.vision_patches
                                  if cfg.family == "vlm" else 0)
-    pre, dec, _, _ = make_serve_steps(cfg, b, max_seq)
-    logits, cache = pre(params, prompt_batch)
-    out = []
+    pre, dec = make_sampling_serve_steps(cfg, b, max_seq,
+                                         temperature=temperature)
     key = jax.random.key(seed)
+    key, sub = jax.random.split(key)
+    last_pos = jnp.full((b,), prompt_len - 1, jnp.int32)
+    nxt, cache = pre(params, prompt_batch, last_pos, sub)
+    out = []
     pos = prompt_len
     extras = {k: v for k, v in prompt_batch.items()
               if k in ("cond",)}
     for _ in range(steps):
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, logits[:, -1] / temperature)
-        else:
-            nxt = jnp.argmax(logits[:, -1], axis=-1)
         if cfg.family == "audio":
-            tokens = nxt.astype(jnp.int32).reshape(b, 1, cfg.n_codebooks)
+            tokens = nxt.reshape(b, 1, cfg.n_codebooks)
         else:
-            tokens = nxt.astype(jnp.int32).reshape(b, 1)
-        out.append(np.asarray(tokens))
-        logits, cache = dec(params, cache,
-                            {"tokens": tokens, **extras}, jnp.int32(pos))
+            tokens = nxt.reshape(b, 1)
+        out.append(np.asarray(tokens))       # 4 bytes/slot, not a vocab row
+        key, sub = jax.random.split(key)
+        nxt, cache = dec(params, cache,
+                         {"tokens": tokens, **extras}, jnp.int32(pos), sub)
         pos += 1
     return np.concatenate(out, axis=1)
