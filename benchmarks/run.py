@@ -334,11 +334,152 @@ def bench_prefill_bucketed():
         f"compile_bound=log2(64)={int(np.log2(64))}")
 
 
+def bench_paged_capacity():
+    """Tokens-in-flight capacity at EQUAL KV memory: dense slot caches
+    reserve max_seq rows per slot, the paged pool reserves pages
+    proportional to each request's actual (plen + max_new).  Measured,
+    not computed: submit short requests and count how many are
+    concurrently in flight before any decode happens.  main() exits
+    nonzero if paged capacity ever regresses below dense."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    max_seq, page = (64, 8) if SMOKE else (128, 16)
+    dense_slots = 2
+    kv_tokens = dense_slots * max_seq          # the shared memory budget
+    n_pages = kv_tokens // page
+    plen, max_new = page - 4, 4                # 1 page per request
+    n_req = n_pages
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+               for _ in range(n_req)]
+
+    def fill_and_run(bat):
+        """Admit (and chunk-prefill) WITHOUT decoding, record peak
+        in-flight, then drain the workload to completion."""
+        reqs = [Request(rid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        prod = threading.Thread(
+            target=lambda: [bat.submit(r) for r in reqs])
+        prod.start()
+        import time as _t
+        _t.sleep(0.05)                          # let the FIFO fill
+        progress = True
+        while progress:
+            progress = bat.admit() > 0
+            while getattr(bat, "_admitting", None):
+                bat._prefill_step()
+                progress = True
+        inflight = sum(r is not None for r in bat._slot_req)
+        t0 = time.perf_counter()
+        bat.run(n_req)
+        dt = time.perf_counter() - t0
+        prod.join()
+        total = sum(len(drain(r)) for r in reqs)
+        return inflight, total / max(dt, 1e-9)
+
+    dense = ContinuousBatcher(cfg, params, n_slots=dense_slots,
+                              max_seq=max_seq)
+    dense_inflight, dense_tps = fill_and_run(dense)
+    pcfg = dataclasses.replace(cfg, kv_page_size=page)
+    paged = ContinuousBatcher(pcfg, params, n_slots=n_req, max_seq=max_seq,
+                              n_pages=n_pages)
+    paged_inflight, paged_tps = fill_and_run(paged)
+    row("paged_capacity", 0.0,
+        f"kv_tokens={kv_tokens};dense_inflight={dense_inflight};"
+        f"paged_inflight={paged_inflight};"
+        f"capacity_x={paged_inflight / max(dense_inflight, 1):.1f};"
+        f"dense_tok_per_s={dense_tps:.0f};paged_tok_per_s={paged_tps:.0f}")
+    RESULTS["paged_capacity"]["dense_inflight"] = dense_inflight
+    RESULTS["paged_capacity"]["paged_inflight"] = paged_inflight
+
+
+def bench_chunked_prefill_latency():
+    """The stall-free-admission claim: p50/p99 inter-token latency of
+    short in-flight requests while a LONG prompt is admitted mid-stream.
+    Dense admission runs one full padded prefill (every slot freezes for
+    the whole prompt); paged+chunked admission interleaves decode steps
+    between prompt chunks, bounding the p99 gap."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    if SMOKE:
+        max_seq, long_len, short_new, chunk, page = 128, 96, 24, 16, 16
+    else:
+        # the long prompt spans 14 chunks: a full-prefill admission
+        # stalls in-flight slots ~14x longer than one chunk does.
+        max_seq, long_len, short_new, chunk, page = 512, 448, 56, 32, 16
+    rng = np.random.default_rng(4)
+    n_short = 3
+
+    def one(paged: bool):
+        c = cfg
+        if paged:
+            c = dataclasses.replace(cfg, kv_page_size=page,
+                                    prefill_chunk=chunk,
+                                    prefill_interleave=1)
+        bat = ContinuousBatcher(c, params, n_slots=4, max_seq=max_seq)
+        shorts = [Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size,
+                                              8).astype(np.int32),
+                          max_new=short_new) for i in range(n_short)]
+        long_r = Request(rid=99,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             long_len).astype(np.int32),
+                         max_new=2)
+        stamps = {r.rid: [] for r in shorts}
+        for r in shorts:                        # stamp at push time
+            orig = r.out.Push
+            r.out.Push = (lambda v, _o=orig, rid=r.rid:
+                          (stamps[rid].append(time.perf_counter()),
+                           _o(v))[1])
+
+        def produce():
+            for r in shorts:
+                bat.submit(r)
+            time.sleep(0.02)                    # land mid-decode: shorts
+            bat.submit(long_r)                  # run ~50-100ms of steps
+
+        prod = threading.Thread(target=produce)
+        prod.start()
+        bat.run(n_short + 1)
+        prod.join()
+        for r in shorts + [long_r]:
+            drain(r)
+        gaps = np.concatenate([np.diff(stamps[r.rid]) for r in shorts])
+        return (float(np.percentile(gaps, 50)) * 1e6,
+                float(np.percentile(gaps, 99)) * 1e6,
+                float(gaps.max()) * 1e6)
+
+    for paged in (False, True):
+        one(paged)                              # compile warm-up pass
+        p50, p99, pmax = one(paged)
+        name = ("serve_longprompt_paged" if paged
+                else "serve_longprompt_dense")
+        row(name, p50,
+            f"p50_us={p50:.0f};p99_us={p99:.0f};max_stall_us={pmax:.0f};"
+            f"long_len={long_len};"
+            f"mode={'chunked' if paged else 'full_prefill'}")
+        RESULTS[name]["p99_us"] = round(p99, 1)
+        RESULTS[name]["max_stall_us"] = round(pmax, 1)
+
+
 # Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
 # workloads (fewer requests/lengths), so they write a separate
 # BENCH_serve_smoke.json — only same-mode snapshots are diffable.
 SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
-              "batcher_throughput", "prefill_bucketed")
+              "batcher_throughput", "prefill_bucketed", "paged_capacity",
+              "serve_longprompt_dense", "serve_longprompt_paged")
 
 
 def main(argv=None) -> None:
@@ -366,6 +507,8 @@ def main(argv=None) -> None:
     bench_decode_step()
     bench_batcher_throughput()
     bench_prefill_bucketed()
+    bench_paged_capacity()
+    bench_chunked_prefill_latency()
 
     out_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)),
@@ -375,6 +518,34 @@ def main(argv=None) -> None:
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# wrote {out_path}", flush=True)
+
+    # Loud failures (CI gate) instead of a silent JSON write:
+    # 1. the paged pool must sustain at least the dense tokens-in-flight
+    #    at equal KV memory;
+    # 2. the long-prompt admission stall under paged+chunked must stay
+    #    bounded relative to the dense full-prefill stall.  At smoke
+    #    scale the per-chunk gather/scatter overhead rivals the (tiny)
+    #    full prefill, so smoke only guards against gross interleave
+    #    breakage (e.g. chunks draining with no decode in between);
+    #    the full run enforces strictly-no-worse.
+    cap = RESULTS.get("paged_capacity", {})
+    if cap and cap.get("paged_inflight", 0) < cap.get("dense_inflight", 0):
+        print(f"FATAL: paged capacity regressed below dense at equal "
+              f"KV memory: paged={cap.get('paged_inflight')} < "
+              f"dense={cap.get('dense_inflight')}", flush=True)
+        raise SystemExit(1)
+    dense_stall = RESULTS.get("serve_longprompt_dense",
+                              {}).get("max_stall_us")
+    paged_stall = RESULTS.get("serve_longprompt_paged",
+                              {}).get("max_stall_us")
+    if dense_stall and paged_stall:
+        factor = 3.0 if SMOKE else 1.0
+        if paged_stall > factor * dense_stall:
+            print(f"FATAL: chunked-prefill admission stall "
+                  f"({paged_stall:.0f}us) exceeds {factor:.0f}x the dense "
+                  f"full-prefill stall ({dense_stall:.0f}us) — interleave "
+                  f"is not bounding inter-token latency", flush=True)
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

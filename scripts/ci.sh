@@ -21,5 +21,8 @@ python -m pytest -x -q \
 
 # Serving fast-path benches (smoke): writes benchmarks/BENCH_serve_smoke.json
 # so every CI run leaves a machine-readable perf snapshot behind without
-# clobbering the committed full-run BENCH_serve.json trajectory.
+# clobbering the committed full-run BENCH_serve.json trajectory.  The serve
+# set includes the paged-KV rows (paged_capacity, serve_longprompt_*);
+# benchmarks.run exits NONZERO — failing this script — if paged
+# tokens-in-flight capacity ever regresses below dense at equal KV memory.
 python -m benchmarks.run --smoke --serve

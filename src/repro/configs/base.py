@@ -85,6 +85,13 @@ class ModelConfig:
     decode_seq_shard: bool = False    # beyond-paper: shard decode KV over seq
     decode_flash: bool = False        # beyond-paper: sq=1 flash decode kernel
     kv_cache_dtype: str = "bfloat16"  # beyond-paper: "int8" quantized KV
+    # paged serving (continuous batcher): page-pool KV with per-slot block
+    # tables.  0 = dense slot caches.  Recurrent families (ssm/hybrid) and
+    # structured caches (gemma3 local/global, MLA, int8 KV) fall back to
+    # dense regardless — see serve/batching.py.
+    kv_page_size: int = 0
+    prefill_chunk: int = 0            # chunked-prefill chunk tokens (0 = auto)
+    prefill_interleave: int = 1       # decode steps between prefill chunks
     embed_std: float = 0.02
 
     # -- derived -----------------------------------------------------------------

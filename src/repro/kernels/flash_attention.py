@@ -317,3 +317,138 @@ def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     )(pos_arr, q3, k3, v3)
 
     return out.reshape(b, hq, d)[:, :, None, :]
+
+
+# --- paged decode (block-table gather via scalar prefetch) ----------------------------
+#
+# The paged KV cache stores (page, kv_head, page_size, d) tiles in one
+# shared pool; a per-sequence block table maps logical page j to its
+# physical page id.  The decode kernel keeps the kv-only sequential grid
+# of ``flash_attention_decode`` but *gathers* its kv blocks through the
+# scalar-prefetched block table: the BlockSpec index map reads
+# ``bt_ref[seq, j]`` to pick which physical page to DMA next, so the
+# dense (b, S, d) cache view is never materialized — pages stream
+# HBM -> VMEM exactly like contiguous blocks would.  Logical pages whose
+# start is past ``pos`` are skipped via ``pl.when`` (their table entries
+# may be unallocated; callers clamp them so the prefetched index is
+# always a fetchable page).
+
+
+def _flash_decode_paged_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                               m_scr, l_scr, acc_scr, *, scale: float,
+                               window: Optional[int], page: int, hkv: int):
+    i = pl.program_id(0)
+    jk = pl.program_id(1)
+    nk = pl.num_programs(1)
+    pos = pos_ref[i // hkv]
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = jk * page
+    active = k_start <= pos                           # skip future pages
+    if window is not None:
+        active &= k_start + page - 1 > pos - window   # skip out-of-window
+
+    @pl.when(active)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale      # (group, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (page, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (group, page)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos <= pos
+        if window is not None:
+            valid &= kpos > pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                 v_pages: jnp.ndarray,
+                                 block_tab: jnp.ndarray, pos: jnp.ndarray,
+                                 window: Optional[int] = None,
+                                 scale: Optional[float] = None,
+                                 interpret: Optional[bool] = None
+                                 ) -> jnp.ndarray:
+    """Single-step decode attention over a *paged* KV cache.
+
+    q: (b, hq, 1, d); k_pages/v_pages: (n_pages, hkv, page, d) shared
+    pools; block_tab: (b, n_blocks) int32 physical page per logical page
+    (unallocated entries must be clamped into [0, n_pages) by the caller —
+    they are skipped/masked, but the index map still has to name a real
+    page); pos: (b,) int32 decode positions.  ``window`` applies the
+    (pos - window, pos] band on *logical* positions.  Returns
+    (b, hq, 1, d), matching ``ref.paged_attention_ref``.
+    """
+    b, hq, sq, d = q.shape
+    if sq != 1:
+        raise ValueError(f"paged decode requires sq == 1, got {sq}")
+    n_pages, hkv, page, _ = k_pages.shape
+    if hq % hkv:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    n_blocks = block_tab.shape[1]
+    bh = b * hkv
+    q3 = q[:, :, 0, :].reshape(b, hkv, group, d).reshape(bh, group, d)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    bt = jnp.minimum(block_tab.astype(jnp.int32), n_pages - 1)
+
+    kernel = functools.partial(
+        _flash_decode_paged_kernel, scale=scale, window=window, page=page,
+        hkv=hkv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                        # pos, block table
+        grid=(bh, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, group, d),
+                         lambda i, jk, pos_ref, bt_ref: (i, 0, 0)),
+            # the paged gather: physical page picked by the block table.
+            pl.BlockSpec((1, 1, page, d),
+                         lambda i, jk, pos_ref, bt_ref, h=hkv: (
+                             bt_ref[i // h, jk], i % h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda i, jk, pos_ref, bt_ref, h=hkv: (
+                             bt_ref[i // h, jk], i % h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d),
+                               lambda i, jk, pos_ref, bt_ref: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, group, d), q.dtype),
+        interpret=interpret,
+    )(pos_arr, bt, q3, k_pages, v_pages)
+
+    return out.reshape(b, hq, d)[:, :, None, :]

@@ -33,6 +33,21 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     return ref.attention_ref(q, k, v, causal=causal, window=window)
 
 
+@partial(jax.jit, static_argnames=("window", "use_pallas", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tab, pos, *,
+                           window: Optional[int] = None,
+                           use_pallas: bool = False, interpret: bool = True):
+    """Paged-KV decode attention: q (b,hq,1,d) against (n_pages, hkv,
+    page, d) pools gathered through (b, n_blocks) block tables."""
+    if use_pallas:
+        from .flash_attention import flash_attention_decode_paged
+        return flash_attention_decode_paged(q, k_pages, v_pages, block_tab,
+                                            pos, window=window,
+                                            interpret=interpret)
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_tab, pos,
+                                   window=window)
+
+
 @partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
 def ssd(x, dt, A, B, C, *, chunk: int = 64, use_pallas: bool = False,
         interpret: bool = True):

@@ -56,6 +56,45 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, block_tab: jnp.ndarray,
+                        pos: jnp.ndarray, window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Paged-KV decode attention oracle (the obviously-correct gather path).
+
+    q: (b, hq, 1, d); k_pages/v_pages: (n_pages, hkv, page, d) — the shared
+    device page pool; block_tab: (b, n_blocks) int32 mapping each sequence's
+    logical page index to a physical page (entries >= n_pages are treated
+    as unallocated and may hold anything — they are masked, not read for
+    real positions); pos: (b,) int32 — the position being decoded (logical
+    positions <= pos are live).  Gathers every sequence's pages into a
+    dense (b, hkv, n_blocks·page, d) view, then runs plain masked
+    attention.  The Pallas kernel must match this to tolerance.
+    """
+    b, hq, sq, d = q.shape
+    n_pages, hkv, page, _ = k_pages.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    bt = jnp.minimum(block_tab, n_pages - 1)          # clamp unallocated
+    kd = k_pages[bt].transpose(0, 2, 1, 3, 4)         # (b, hkv, nb, page, d)
+    vd = v_pages[bt].transpose(0, 2, 1, 3, 4)
+    S = bt.shape[1] * page
+    kd = kd.reshape(b, hkv, S, d).astype(jnp.float32)
+    vd = vd.reshape(b, hkv, S, d).astype(jnp.float32)
+    kd = jnp.repeat(kd, group, axis=1)
+    vd = jnp.repeat(vd, group, axis=1)
+    qf = q.astype(jnp.float32) * scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kd)
+    kpos = jnp.arange(S)
+    mask = kpos[None, :] <= pos[:, None]              # (b, S)
+    if window is not None:
+        mask &= kpos[None, :] > pos[:, None] - window
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vd)
+    return out.astype(q.dtype)
+
+
 # --- Mamba2 SSD ------------------------------------------------------------------
 
 

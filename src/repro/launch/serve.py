@@ -26,16 +26,25 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size; > 0 enables the paged batcher "
+                         "(page pools + chunked prefill)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page pool size (default: dense-equivalent)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    if args.page_size:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_page_size=args.page_size)
     params = registry.init(cfg, args.seed)
     rng = np.random.default_rng(args.seed)
 
     batcher = ContinuousBatcher(cfg, params, n_slots=args.slots,
-                                max_seq=args.max_seq)
+                                max_seq=args.max_seq,
+                                n_pages=args.pages or None)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         args.prompt_len).astype(np.int32),
@@ -58,8 +67,12 @@ def main(argv=None):
         out = drain(r)
         total_tokens += len(out)
         print(f"req {r.rid}: {out[:12]}{'...' if len(out) > 12 else ''}")
+    mode = (f"paged(page={batcher.page_size},pool={batcher.n_pages},"
+            f"chunks={batcher.prefill_chunks})" if batcher.paged
+            else "dense")
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s, {batcher.steps} decode steps, "
+          f"{mode}, "
           f"slot-util {total_tokens/max(batcher.steps,1)/args.slots:.2f})")
 
 

@@ -331,6 +331,27 @@ def attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return o.reshape(b, hq, sq, -1).astype(q.dtype)
 
 
+def attention_masked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     mask: jnp.ndarray,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Multi-query attention over a cache with an explicit per-row mask.
+
+    q: (b, hq, sq, d); k, v: (b, hkv, S, dv); mask: (b, sq, S) bool.
+    Generalizes ``attention_decode`` to sq > 1 (chunked prefill: a chunk
+    of queries at positions pos..pos+sq-1 against the gathered cache).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, g, sq, d).astype(F32) * scale
+    s = jnp.einsum("bhgqd,bhcd->bhgqc", qg, k.astype(F32))
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqc,bhcv->bhgqv", p, v.astype(F32))
+    return o.reshape(b, hq, sq, -1).astype(q.dtype)
+
+
 # --- GQA attention block -----------------------------------------------------------
 
 
@@ -464,6 +485,99 @@ def attention_apply(cfg, p, x, *, window: Optional[int] = None,
     y = y @ p["wo"]
     y = constrain(y, "batch", None, "embed")
     return x + y, new_cache
+
+
+def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
+                          theta: Optional[float] = None,
+                          pages: Dict[str, jnp.ndarray],
+                          block_tab: jnp.ndarray, pos: jnp.ndarray):
+    """Pre-norm attention against a *paged* KV cache.
+
+    x: (b, s, d) — s == 1 is a decode step, s > 1 a prefill chunk whose
+    tokens sit at positions pos..pos+s-1.  ``pages``: {"k", "v"} pools of
+    shape (n_pages, hkv, page, hd) for THIS layer.  ``block_tab``:
+    (b, n_blocks) int32, entries >= n_pages meaning unallocated (writes
+    through them drop; reads are clamped and masked).  ``pos``: (b,)
+    int32 start position per row.
+
+    Write-then-read: the chunk's K/V are scattered into the pool first,
+    then attention reads the updated pages, so the current token(s) see
+    themselves without a separate merge.  Numerics mirror the dense
+    path's rounding exactly: a prefill *chunk* (s > 1) attends its own
+    positions at full precision (dense prefill never rounds
+    within-prompt K/V through the cache), while a *decode* step (s == 1)
+    attends the pool-rounded values (dense decode reads the bf16 cache).
+    Sliding windows use the (qpos - window, qpos] band on logical
+    positions — paged caches keep the flat layout (no ring), trading the
+    window-bounded footprint for page-granular alloc/free.  Returns
+    (y, new_pages).
+    """
+    theta = theta if theta is not None else cfg.rope_theta
+    b, s, d = x.shape
+    h = rmsnorm(x, p["norm"])
+    q, k, v = _qkv(cfg, p, h)                        # (b, s, h*, hd)
+    positions = pos[:, None] + jnp.arange(s)         # (b, s)
+    pos_h = positions[:, :, None]                    # broadcast over heads
+    q = rope(q, pos_h, theta).transpose(0, 2, 1, 3)
+    k = rope(k, pos_h, theta).transpose(0, 2, 1, 3)  # (b, hkv, s, hd)
+    v = v.transpose(0, 2, 1, 3)
+
+    pk, pv = pages["k"], pages["v"]
+    n_pages, hkv, page, hd = pk.shape
+    n_blocks = block_tab.shape[1]
+    # positions past the table (padded chunk tail) must write NOWHERE:
+    # route them to the invalid page id so the scatter drops them.
+    logical = positions // page                                     # (b, s)
+    wp = jnp.take_along_axis(block_tab,
+                             jnp.minimum(logical, n_blocks - 1), axis=1)
+    wp = jnp.where(logical < n_blocks, wp, n_pages)
+    wo = positions % page
+    pk = pk.at[wp, :, wo].set(k.transpose(0, 2, 1, 3).astype(pk.dtype),
+                              mode="drop")
+    pv = pv.at[wp, :, wo].set(v.transpose(0, 2, 1, 3).astype(pv.dtype),
+                              mode="drop")
+    new_pages = {"k": pk, "v": pv}
+
+    if cfg.decode_flash and s == 1:
+        from ..kernels.flash_attention import flash_attention_decode_paged
+        o = flash_attention_decode_paged(q, pk, pv, block_tab, pos,
+                                         window=window)
+    else:
+        bt = jnp.minimum(block_tab, n_pages - 1)
+        S = bt.shape[1] * page
+        kd = pk[bt].transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
+        vd = pv[bt].transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
+        kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
+        # overlay the current positions: full precision for a chunk
+        # (s > 1, matching dense prefill), pool-rounded for decode
+        # (s == 1, matching dense decode reading the stored cache).
+        kl, vl = k, v
+        if s == 1:
+            kl = k.astype(pk.dtype).astype(q.dtype)
+            vl = v.astype(pv.dtype).astype(q.dtype)
+        bidx = jnp.arange(b)[:, None]
+        kd = kd.at[bidx, :, positions].set(
+            kl.transpose(0, 2, 1, 3).astype(kd.dtype), mode="drop")
+        vd = vd.at[bidx, :, positions].set(
+            vl.transpose(0, 2, 1, 3).astype(vd.dtype), mode="drop")
+        kpos = jnp.arange(S)
+        mask = kpos[None, None, :] <= positions[:, :, None]   # (b, s, S)
+        if window is not None:
+            mask &= kpos[None, None, :] > positions[:, :, None] - window
+        o = attention_masked(q, kd, vd, mask)
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
+    y = constrain(y, "batch", None, "embed")
+    return x + y, new_pages
+
+
+def attention_paged_cache_decl(cfg, n_pages: int, page_size: int
+                               ) -> Dict[str, Decl]:
+    """One attention layer's shared page pool: (n_pages, hkv, page, hd).
+    The pool has no batch/slot axis — slots own *pages*, not rows."""
+    shp = (n_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
+    ax = (None, "kv_heads", None, None)
+    return {"k": Decl(shp, ax, jnp.bfloat16, init="zeros"),
+            "v": Decl(shp, ax, jnp.bfloat16, init="zeros")}
 
 
 def attention_cache_decl(cfg, batch: int, max_seq: int,

@@ -66,6 +66,8 @@ def num_active_params(cfg: ModelConfig) -> int:
 
 forward = T.forward
 cache_decls = T.cache_decls
+paged_cache_decls = T.paged_cache_decls
+paged_supported = T.paged_supported
 
 
 # --- input specs (ShapeDtypeStruct stand-ins; assignment requirement) -----------------

@@ -47,8 +47,16 @@ def _stack_decls(tree, n: int):
 
 
 def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
-                cache_len: Optional[int] = None):
-    if mode == "decode":
+                cache_len: Optional[int] = None,
+                last_pos: Optional[jnp.ndarray] = None,
+                block_tab: Optional[jnp.ndarray] = None):
+    if mode in ("decode", "chunk"):
+        if block_tab is not None:
+            return L.attention_apply_paged(cfg, p, x, window=window,
+                                           theta=theta, pages=cache,
+                                           block_tab=block_tab, pos=pos)
+        if mode == "chunk":
+            raise NotImplementedError("chunk mode requires a paged cache")
         return L.attention_apply(cfg, p, x, window=window, theta=theta,
                                  cache=cache, pos=pos)
     y, _ = L.attention_apply(cfg, p, x, window=window, theta=theta)
@@ -62,10 +70,21 @@ def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
     v = v.transpose(0, 2, 1, 3)                     # (b, hkv, s, hd)
     Sc = cache_len or s
     if window is not None and Sc == window:
-        kw, vw = k[:, :, -window:], v[:, :, -window:]
-        shift = s % window
-        k = jnp.roll(kw, shift, axis=2)             # ring layout: slot=pos%w
-        v = jnp.roll(vw, shift, axis=2)
+        # Mask-aware ring emission: slot j holds the key of the LAST true
+        # position p <= last_pos with p % w == j.  For right-padded
+        # (bucketed) prompts the padding therefore never lands in a live
+        # ring slot, so any bucket length works — including buckets
+        # larger than the window.  With last_pos == s-1 (no padding) this
+        # reduces exactly to the old roll-by-(s % w) layout.  Slots with
+        # no true position yet (short prompts) hold garbage that decode
+        # masks via its warm-up valid mask.
+        last = (last_pos.astype(jnp.int32) if last_pos is not None
+                else jnp.full((b,), s - 1, jnp.int32))          # (b,)
+        j = jnp.arange(window)
+        pj = last[:, None] - ((last[:, None] - j[None, :]) % window)
+        idx = jnp.clip(pj, 0, s - 1)                            # (b, w)
+        k = jnp.take_along_axis(k, idx[:, None, :, None], axis=2)
+        v = jnp.take_along_axis(v, idx[:, None, :, None], axis=2)
     elif Sc > s:
         pad = ((0, 0), (0, 0), (0, Sc - s), (0, 0))
         k, v = jnp.pad(k, pad), jnp.pad(v, pad)
@@ -136,10 +155,14 @@ def dense_blocks(cfg):
     decls = {"attn": L.attention_decls(cfg, (Ln,)),
              "mlp": L.mlp_decls(cfg, (Ln,))}
 
-    def apply(cfg, p, x, cache, pos, mode, cache_len=None):
-        x, nc = _attn_block(cfg, p["attn"], x, window=cfg.sliding_window,
+    def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
+              block_tab=None):
+        w = cfg.sliding_window
+        cl = min(cache_len, w) if (w and cache_len) else cache_len
+        x, nc = _attn_block(cfg, p["attn"], x, window=w,
                             theta=cfg.rope_theta, cache=cache, pos=pos,
-                            mode=mode, cache_len=cache_len)
+                            mode=mode, cache_len=cl, last_pos=last_pos,
+                            block_tab=block_tab)
         x = L.mlp_apply(cfg, p["mlp"], x)
         return x, nc
 
@@ -161,7 +184,8 @@ def gemma3_blocks(cfg):
             return cfg.sliding_window, cfg.rope_theta
         return None, cfg.rope_theta_global
 
-    def apply(cfg, p, x, cache, pos, mode, cache_len=None):
+    def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
+              block_tab=None):
         local_caches, global_caches = [], []
         for i in range(per):
             pi = _tree_idx(p, i)
@@ -176,7 +200,7 @@ def gemma3_blocks(cfg):
                 cl = min(cache_len, window) if window else cache_len
             x, nc = _attn_block(cfg, pi["attn"], x, window=window,
                                 theta=theta, cache=ci, pos=pos, mode=mode,
-                                cache_len=cl)
+                                cache_len=cl, last_pos=last_pos)
             x = L.mlp_apply(cfg, pi["mlp"], x)
             if nc is not None:
                 (local_caches if i < n_local else global_caches).append(nc)
@@ -207,10 +231,14 @@ def moe_blocks(cfg):
     decls = {"attn": L.attention_decls(cfg, (Ln,)),
              "moe": L.moe_decls(cfg, (Ln,))}
 
-    def apply(cfg, p, x, cache, pos, mode, cache_len=None):
-        x, nc = _attn_block(cfg, p["attn"], x, window=cfg.sliding_window,
+    def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
+              block_tab=None):
+        w = cfg.sliding_window
+        cl = min(cache_len, w) if (w and cache_len) else cache_len
+        x, nc = _attn_block(cfg, p["attn"], x, window=w,
                             theta=cfg.rope_theta, cache=cache, pos=pos,
-                            mode=mode, cache_len=cache_len)
+                            mode=mode, cache_len=cl, last_pos=last_pos,
+                            block_tab=block_tab)
         x = L.moe_apply(cfg, p["moe"], x)
         return x, nc
 
@@ -232,13 +260,15 @@ def deepseek_blocks(cfg):
                  "moe": L.moe_decls(cfg, (Ln,))},
     }
 
-    def apply_first(cfg, p, x, cache, pos, mode, cache_len=None):
+    def apply_first(cfg, p, x, cache, pos, mode, cache_len=None,
+                    last_pos=None, block_tab=None):
         x, nc = _mla_block(cfg, p["attn"], x, cache=cache, pos=pos,
                            mode=mode, cache_len=cache_len)
         x = L.mlp_apply(cfg, p["mlp"], x)
         return x, nc
 
-    def apply_rest(cfg, p, x, cache, pos, mode, cache_len=None):
+    def apply_rest(cfg, p, x, cache, pos, mode, cache_len=None,
+                   last_pos=None, block_tab=None):
         x, nc = _mla_block(cfg, p["attn"], x, cache=cache, pos=pos,
                            mode=mode, cache_len=cache_len)
         x = L.moe_apply(cfg, p["moe"], x)
@@ -256,7 +286,8 @@ def mamba2_blocks(cfg):
     Ln = cfg.n_layers
     decls = {"ssm": S.mamba2_decls(cfg, (Ln,))}
 
-    def apply(cfg, p, x, cache, pos, mode, cache_len=None):
+    def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
+              block_tab=None):
         return _mamba_block(cfg, p["ssm"], x, cache=cache, pos=pos, mode=mode)
 
     def cache_decl(batch, max_seq):
@@ -282,7 +313,8 @@ def zamba2_blocks(cfg):
     if tail:
         decls["ssm_tail"] = S.mamba2_decls(cfg, (tail,))
 
-    def apply_group(cfg, p_g, shared, x, cache, pos, mode, cache_len=None):
+    def apply_group(cfg, p_g, shared, x, cache, pos, mode, cache_len=None,
+                    last_pos=None, block_tab=None):
         mamba_caches = []
         for i in range(k):
             ci = (_tree_idx(cache["ssm"], i)
@@ -295,7 +327,8 @@ def zamba2_blocks(cfg):
                       else None)
         x, attn_nc = _attn_block(cfg, shared["attn"], x, window=None,
                                  theta=cfg.rope_theta, cache=attn_cache,
-                                 pos=pos, mode=mode, cache_len=cache_len)
+                                 pos=pos, mode=mode, cache_len=cache_len,
+                                 last_pos=last_pos)
         x = L.mlp_apply(cfg, shared["mlp"], x)
         new_cache = None
         if mamba_caches:
@@ -341,10 +374,12 @@ def musicgen_blocks(cfg):
         y = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd) @ p["wo"]
         return x + constrain(y, "batch", None, "embed")
 
-    def apply(cfg, p, x, cond, cache, pos, mode, cache_len=None):
+    def apply(cfg, p, x, cond, cache, pos, mode, cache_len=None,
+              last_pos=None, block_tab=None):
         x, nc = _attn_block(cfg, p["attn"], x, window=None,
                             theta=cfg.rope_theta, cache=cache, pos=pos,
-                            mode=mode, cache_len=cache_len)
+                            mode=mode, cache_len=cache_len,
+                            last_pos=last_pos)
         x = cross_apply(p["cross"], x, cond)
         x = L.mlp_apply(cfg, p["mlp"], x)
         return x, nc
@@ -395,6 +430,26 @@ def cache_decls(cfg, batch: int, max_seq: int):
     return builder(batch, max_seq)
 
 
+def paged_supported(cfg) -> bool:
+    """Families whose KV caches can live in a shared page pool: uniform
+    {k, v} attention caches only.  Recurrent state (ssm/hybrid) is
+    O(1)/slot and stays slot-dense; gemma3's local/global split, MLA's
+    compressed cache, and int8 KV keep their dense layouts for now."""
+    return (cfg.family in ("dense", "moe") and not cfg.local_global_pattern
+            and not cfg.mla and cfg.kv_cache_dtype != "int8")
+
+
+def paged_cache_decls(cfg, n_pages: int, page_size: int):
+    """Per-layer shared page pools, stacked for scan-over-layers:
+    (n_layers, n_pages, hkv, page_size, head_dim) per k/v leaf."""
+    if not paged_supported(cfg):
+        raise NotImplementedError(
+            f"paged KV unsupported for {cfg.name} ({cfg.family}); "
+            "use dense slot caches")
+    return _stack_decls(
+        L.attention_paged_cache_decl(cfg, n_pages, page_size), cfg.n_layers)
+
+
 def _remat(cfg, fn):
     if cfg.remat == "none":
         return fn
@@ -423,16 +478,18 @@ def _embed_input(cfg, params, batch) -> jnp.ndarray:
     return x.astype(dtype)
 
 
-def _scan_blocks(cfg, apply, blocks_p, x, cache, pos, mode, cache_len):
+def _scan_blocks(cfg, apply, blocks_p, x, cache, pos, mode, cache_len,
+                 last_pos=None, block_tab=None):
     def body(carry, xs):
         x = carry
         p_i, c_i = xs
-        x, nc = apply(cfg, p_i, x, c_i, pos, mode, cache_len=cache_len)
+        x, nc = apply(cfg, p_i, x, c_i, pos, mode, cache_len=cache_len,
+                      last_pos=last_pos, block_tab=block_tab)
         return x, nc
 
     body = _remat(cfg, body)
     n = jax.tree.leaves(blocks_p)[0].shape[0]
-    caches = cache if (cache is not None and mode == "decode") \
+    caches = cache if (cache is not None and mode in ("decode", "chunk")) \
         else jnp.zeros((n, 1))
     x, new_cache = lax.scan(body, x, (blocks_p, caches))
     if mode == "train":
@@ -445,19 +502,36 @@ def forward(cfg, params, batch, mode: str = "train",
             cache_len: Optional[int] = None,
             last_pos: Optional[jnp.ndarray] = None):
     """train -> logits (b, s, Vp); prefill -> (last logits, cache);
-    decode -> (logits (b, 1, Vp), new cache).
+    decode/chunk -> (logits, new cache).
 
-    ``last_pos`` (prefill only): (b,) int32 per-sequence index of the true
-    last token.  Bucketed serving right-pads prompts to a power-of-two
-    length; the returned logits are then gathered at ``last_pos`` instead
-    of the (padded) final position.  Causality guarantees the padding
-    cannot influence positions <= last_pos."""
+    ``last_pos`` (prefill/chunk): (b,) int32 per-sequence index of the
+    true last token.  Bucketed serving right-pads prompts to a
+    power-of-two length and chunked prefill right-pads the final chunk;
+    the returned logits are gathered at ``last_pos`` instead of the
+    (padded) final position.  Causality guarantees the padding cannot
+    influence positions <= last_pos.  In prefill, ``last_pos`` also
+    drives the mask-aware ring emission for sliding-window layers.
+
+    Paged serving: pass ``cache={"pages": pools, "block_tab": bt}`` with
+    per-layer page pools (leading n_layers axis) and a (b, n_blocks)
+    int32 block table; ``pos`` is then a (b,) per-row position vector.
+    ``mode="chunk"`` runs a multi-token prefill chunk against the paged
+    cache (x at positions pos..pos+s-1), enabling chunked prefill
+    interleaved with decode.  Returns the updated pools as the new cache.
+    """
     dtype = jnp.dtype(cfg.dtype)
     params = jax.tree.map(
         lambda p: p.astype(dtype)
         if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
     x = _embed_input(cfg, params, batch)
     x = constrain(x, "batch", None, "embed")
+
+    block_tab = None
+    if cache is not None and isinstance(cache, dict) and "block_tab" in cache:
+        block_tab = cache["block_tab"]
+        cache = cache["pages"]
+    if mode == "chunk" and block_tab is None:
+        raise NotImplementedError("chunk mode requires a paged cache")
 
     fam = _family(cfg)
     blocks_p = params["blocks"]
@@ -472,9 +546,11 @@ def forward(cfg, params, batch, mode: str = "train",
         cr = cache["rest"] if (cache is not None and mode == "decode") \
             else None
         x, c_first = _scan_blocks(cfg, apply_first, blocks_p["first"], x,
-                                  cf, pos, mode, cache_len)
+                                  cf, pos, mode, cache_len,
+                                  last_pos=last_pos)
         x, c_rest = _scan_blocks(cfg, apply_rest, blocks_p["rest"], x,
-                                 cr, pos, mode, cache_len)
+                                 cr, pos, mode, cache_len,
+                                 last_pos=last_pos)
         new_cache = None if mode == "train" else {"first": c_first,
                                                   "rest": c_rest}
     elif cfg.family == "hybrid":
@@ -516,18 +592,21 @@ def forward(cfg, params, batch, mode: str = "train",
     elif cfg.family == "audio":
         apply = fam[1]
 
-        def apply2(cfg, p, x, c, pos, mode, cache_len=None):
-            return apply(cfg, p, x, cond, c, pos, mode, cache_len)
+        def apply2(cfg, p, x, c, pos, mode, cache_len=None, last_pos=None,
+                   block_tab=None):
+            return apply(cfg, p, x, cond, c, pos, mode, cache_len,
+                         last_pos=last_pos, block_tab=block_tab)
 
         x, new_cache = _scan_blocks(cfg, apply2, blocks_p, x, cache, pos,
-                                    mode, cache_len)
+                                    mode, cache_len, last_pos=last_pos)
     else:
         apply = fam[1]
         x, new_cache = _scan_blocks(cfg, apply, blocks_p, x, cache, pos,
-                                    mode, cache_len)
+                                    mode, cache_len, last_pos=last_pos,
+                                    block_tab=block_tab)
 
     x = L.rmsnorm(x, params["final_norm"])
-    if mode == "prefill":
+    if mode in ("prefill", "chunk"):
         if last_pos is not None:
             idx = last_pos.astype(jnp.int32)[:, None, None]
             x = jnp.take_along_axis(x, idx, axis=1)

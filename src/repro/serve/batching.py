@@ -7,33 +7,58 @@ reusing the slot — continuous batching.  Producer/batcher/consumer is
 exactly the paper's Read/Compute/Write dataflow and runs under
 ``DataflowContext`` in ``examples/serve_lm.py``.
 
-Serving fast path (device-resident slot state)
-----------------------------------------------
-Following the paper's principle that the hot loop must never leave the
-pipeline, all per-slot decode state — ``last_tok``, ``pos``,
-``remaining``, and the active mask — lives in device arrays.  One
-*donated* jitted call advances every slot per step: it decodes all slots
-(inactive ones masked), samples the next token on device (argmax fused
-into the step, so logits never materialize on the host), detects finished
-sequences on device, and returns a single small ``(2, n_slots)`` int32
-array (next token + finished flag per slot).  That vector is the ONLY
-per-step device->host transfer: 8 bytes/slot instead of a vocab row.
+Device-resident fast path
+-------------------------
+All per-slot decode state — ``last_tok``, ``pos``, ``remaining``, and the
+active mask — lives in device arrays.  One *donated* jitted call advances
+every slot per step, samples on device, and returns a single small
+``(2, n_slots)`` int32 array (next token + finished flag per slot): the
+ONLY per-step device->host transfer is 8 bytes/slot instead of a vocab
+row.
 
-Admission is *bucketed* and *batched*: prompts are right-padded to
-power-of-two buckets and up to ``n_slots`` pending requests prefill in a
-single padded (vmapped) call, with the resulting caches scattered into
-their slots on device (out-of-range rows dropped).  The jitted admission
-function is cached per bucket with an LRU bound, so arbitrary prompt
-lengths cost at most ``log2(max_seq)`` prefill compilations.  For
-sliding-window configs a bucket larger than the window would corrupt the
-ring-cache layout, so those prompts fall back to exact-length prefill.
+Paged KV cache (``cfg.kv_page_size > 0``)
+-----------------------------------------
+Dense slot caches reserve ``n_slots x max_seq`` KV rows no matter how
+short each request is.  In paged mode every attention layer instead owns
+a shared device page pool ``(n_pages, hkv, page, head_dim)``; a host-side
+``PageAllocator`` (free list) hands pages to requests at admission and
+takes them back in bulk at retire, and a per-slot *block table* maps
+logical page j -> physical page.  KV memory is therefore bounded by
+tokens actually in flight (``sum_i ceil((plen_i + max_new_i)/page)``
+pages), not by ``n_slots x max_seq`` — short requests stop reserving
+worst-case rows, so the same pool sustains strictly more concurrent
+sequences.  When the pool runs dry, admission simply *waits*: the
+request stays at the head of the FIFO (backpressure) until a retire
+frees pages — it is never errored.
+
+Chunked prefill
+---------------
+Dense admission prefils a full ``n_slots``-row padded batch per pow2
+bucket — one compiled shape per bucket (<= log2(max_seq) compiles), but
+a single long admission blocks every in-flight slot for the whole
+prompt, and a single short admission still pays n_slots rows.  Paged
+mode instead admits prompts in fixed-size *chunks* (one compiled shape
+per chunk size, total TWO serving programs: chunk + decode) interleaved
+with decode steps inside ``run``: ``cfg.prefill_interleave`` decode
+steps run between consecutive chunks, so a 4k-token prompt admitted
+mid-stream costs active slots at most one chunk of latency per token
+instead of one full prefill — bounded inter-token p99.
+
+Dense fallback
+--------------
+Recurrent families (ssm/hybrid) keep O(1)/slot state — there is nothing
+to page — and gemma3's local/global split, MLA's compressed cache, and
+int8 KV keep their dense layouts; ``registry.paged_supported`` gates the
+switch and the batcher silently falls back to the dense path (bucketed
+padded prefill, exact-length for recurrent state) for them.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,12 +68,61 @@ from ..configs.base import ModelConfig
 from ..core.stream import Stream, StreamClosed
 from ..models import registry
 from ..models import params as PP
+from .serve_loop import make_chunk_prefill_step, make_paged_decode_step
 
 _MIN_BUCKET = 8            # smallest prefill bucket (pad-to-power-of-two)
+_MIN_CHUNK = 16            # smallest auto-selected prefill chunk
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# --- page allocator -------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Host-side free-list allocator for the device KV page pool.
+
+    ``alloc(n)`` returns n physical page ids or ``None`` (insufficient —
+    the caller backpressures, it never partially allocates); ``free``
+    returns pages in bulk and rejects double/foreign frees.  O(1) per
+    page; the pool itself never moves on device.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"free of unallocated page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+
+
+# --- jitted step factories (dense path) -----------------------------------------------
 
 
 @functools.lru_cache(maxsize=32)
@@ -120,16 +194,32 @@ class Request:
         default_factory=lambda: Stream(depth=4096, name="resp"))
 
 
+@dataclasses.dataclass
+class _Admission:
+    """A request mid-chunked-prefill: owns a slot + pages, not yet decoding."""
+    req: Request
+    slot: int
+    pages: List[int]
+    plen: int
+    next_chunk: int
+    n_chunks: int
+
+
 class ContinuousBatcher:
     """Fixed-slot continuous batcher with device-resident slot state.
 
-    The host keeps only the slot -> ``Request`` mapping (needed to route
-    retired tokens to per-request output streams); everything the decode
-    loop reads or writes stays on device across steps.
+    The host keeps only the slot -> ``Request`` mapping, the page
+    allocator, and the block tables' mirror; everything the decode loop
+    reads or writes stays on device across steps.  ``cfg.kv_page_size``
+    selects paged KV + chunked prefill (see module docstring); families
+    without pageable caches fall back to the dense path automatically.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
-                 max_seq: int):
+                 max_seq: int, n_pages: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_interleave: Optional[int] = None):
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError("batcher demo covers LM families")
         self.cfg, self.params = cfg, params
@@ -139,9 +229,13 @@ class ContinuousBatcher:
         self.steps = 0
         self.retired = 0
         self.prefill_compiles = 0
+        self.prefill_chunks = 0
 
         # host mirror: which Request occupies each slot (None = free).
         self._slot_req: List[Optional[Request]] = [None] * n_slots
+        # requests popped from the FIFO but not yet placed (admission
+        # backpressure, and the idle-path re-queue in run()).
+        self._pending: Deque[Request] = collections.deque()
 
         # device-resident slot state.
         i32 = jnp.int32
@@ -150,34 +244,125 @@ class ContinuousBatcher:
         self.remaining = jnp.zeros((n_slots,), i32)
         self.active = jnp.zeros((n_slots,), bool)
 
-        cache_d = registry.cache_decls(cfg, 1, max_seq)
-        one = PP.init_params(cache_d)  # zeros (init=zeros decls)
-        self.cache = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (n_slots,) + a.shape).copy(), one)
+        psz = page_size or cfg.kv_page_size
+        self.paged = bool(psz) and registry.paged_supported(cfg)
+        if self.paged:
+            self.page_size = int(psz)
+            self.n_blocks = _ceil_div(max_seq, self.page_size)
+            # default pool = dense-equivalent capacity; benchmarks pass a
+            # smaller pool to show the memory-proportionality win.
+            self.n_pages = int(n_pages or n_slots * self.n_blocks)
+            self.chunk = int(prefill_chunk or cfg.prefill_chunk
+                             or max(self.page_size, _MIN_CHUNK))
+            self.prefill_interleave = int(
+                cfg.prefill_interleave if prefill_interleave is None
+                else prefill_interleave)
+            self._alloc = PageAllocator(self.n_pages)
+            self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+            self._admitting: Deque[_Admission] = collections.deque()
+            self.pools = PP.init_params(
+                registry.paged_cache_decls(cfg, self.n_pages, self.page_size))
+            # invalid page id == n_pages: reads clamp (and are masked),
+            # writes scatter-drop.
+            self.block_tab = jnp.full((n_slots, self.n_blocks), self.n_pages,
+                                      i32)
+            self._step = make_paged_decode_step(cfg, max_seq)
+            self._chunk_fn = make_chunk_prefill_step(cfg, self.chunk,
+                                                     max_seq)
+        else:
+            cache_d = registry.cache_decls(cfg, 1, max_seq)
+            one = PP.init_params(cache_d)  # zeros (init=zeros decls)
+            self.cache = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_slots,) + a.shape).copy(),
+                one)
+            self._step = _make_step_fn(cfg, max_seq)
 
-        self._step = _make_step_fn(cfg, max_seq)
+    # -- shared helpers -------------------------------------------------------------
 
-    # -- bucketed admission ---------------------------------------------------------
+    def _next_request(self) -> Optional[Request]:
+        if self._pending:
+            return self._pending.popleft()
+        return self.requests.TryPop()
+
+    def _reject(self, r: Request) -> None:
+        """Unservable request (bypassed submit() validation, or needs
+        more pages than the whole pool): close its stream so its consumer
+        ends instead of raising inside the batcher PE."""
+        r.out.close()
+        self.retired += 1
+
+    # -- paged admission (chunked prefill) --------------------------------------------
+
+    def _pages_needed(self, r: Request) -> int:
+        return _ceil_div(min(len(r.prompt) + r.max_new, self.max_seq),
+                         self.page_size)
+
+    def _try_admit_paged(self, r: Request, slot: int) -> bool:
+        """Reserve pages + a slot and start chunked prefill.  Returns
+        False (leaving ``r`` to the caller) when the pool is dry."""
+        pages = self._alloc.alloc(self._pages_needed(r))
+        if pages is None:
+            return False
+        row = np.full((self.n_blocks,), self.n_pages, np.int32)
+        row[:len(pages)] = pages
+        self.block_tab = self.block_tab.at[slot].set(jnp.asarray(row))
+        self._slot_pages[slot] = pages
+        plen = len(r.prompt)
+        self._admitting.append(_Admission(
+            req=r, slot=slot, pages=pages, plen=plen, next_chunk=0,
+            n_chunks=max(1, _ceil_div(plen, self.chunk))))
+        return True
+
+    def _prefill_step(self) -> None:
+        """Run ONE chunk of the oldest mid-admission request."""
+        a = self._admitting[0]
+        C, c = self.chunk, a.next_chunk
+        seg = np.zeros((1, C), np.int32)
+        part = np.asarray(a.req.prompt[c * C:(c + 1) * C], np.int32)
+        seg[0, :len(part)] = part
+        final = c == a.n_chunks - 1
+        last_in_chunk = (a.plen - 1 - c * C) if final else (C - 1)
+        (self.pools, self.last_tok, self.pos, self.remaining, self.active,
+         tok0) = self._chunk_fn(
+            self.params, self.pools, self.block_tab, self.last_tok,
+            self.pos, self.remaining, self.active, jnp.asarray(seg),
+            jnp.full((1,), c * C, jnp.int32),
+            jnp.full((1,), last_in_chunk, jnp.int32),
+            jnp.int32(a.slot), jnp.asarray(final),
+            jnp.int32(a.plen), jnp.int32(a.req.max_new))
+        self.prefill_chunks += 1
+        a.next_chunk += 1
+        if final:
+            self._admitting.popleft()
+            a.req.out.Push(int(tok0))
+            if a.req.max_new > 1 and a.plen < self.max_seq - 1:
+                self._slot_req[a.slot] = a.req
+            else:                              # retired at admission
+                a.req.out.close()
+                self.retired += 1
+                self._release_slot(a.slot)
+
+    def _release_slot(self, slot: int) -> None:
+        """Bulk-free the slot's pages and invalidate its block table row
+        so later (masked) decode writes can never touch reused pages."""
+        self._alloc.free(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self.block_tab = self.block_tab.at[slot].set(self.n_pages)
+
+    # -- dense bucketed admission -----------------------------------------------------
 
     def _bucket_for(self, plen: int) -> int:
         """Pad-to-power-of-two bucket for a prompt length.
 
-        Two exact-length fallbacks (correctness over compile reuse):
-        * sliding-window configs use ring caches of size ``window``; a
-          padded prefill longer than the window would place padding
-          garbage in live ring slots;
-        * recurrent families (ssm/hybrid) reduce conv/ssd state over the
-          WHOLE padded sequence — padding tokens would corrupt the state
-          itself, which no ``last_pos`` gather can fix (attention caches
-          are safe: padded positions are masked or overwritten before
-          they are ever read)."""
+        Recurrent families (ssm/hybrid) fall back to exact length:
+        conv/ssd state reduces over the WHOLE padded sequence, so padding
+        tokens would corrupt the state itself, which no ``last_pos``
+        gather can fix.  Attention caches are safe for ANY bucket —
+        padded positions are masked or (sliding window) excluded by the
+        mask-aware ring emission — so windowed configs now bucket too."""
         if self.cfg.family in ("ssm", "hybrid"):
             return plen
-        b = min(max(_MIN_BUCKET, _next_pow2(plen)), self.max_seq)
-        w = self.cfg.sliding_window
-        if w is not None and b > w:
-            return plen
-        return b
+        return min(max(_MIN_BUCKET, _next_pow2(plen)), self.max_seq)
 
     def _admit_fn(self, bucket: int) -> Callable:
         """Per-bucket jitted admission program.  The LRU bound lives on
@@ -198,16 +383,12 @@ class ContinuousBatcher:
         are zero prompts whose results scatter-drop): one compiled shape
         per bucket keeps the log2(max_seq) compile bound, at the cost of
         up to (n_slots-1)/n_slots wasted prefill FLOPs when admitting a
-        single request.  Fine at demo slot counts; chunked prefill
-        (ROADMAP) is the real fix at large n_slots."""
+        single request.  The paged path's chunked prefill is the fix;
+        this is the dense fallback."""
         groups: Dict[int, List[Tuple[int, Request]]] = {}
         for slot, r in pairs:
             if len(r.prompt) >= self.max_seq:
-                # bypassed submit() validation (direct Push): reject just
-                # this request — close its stream so its consumer ends —
-                # instead of raising inside the batcher PE.
-                r.out.close()
-                self.retired += 1
+                self._reject(r)    # bypassed submit() validation
                 continue
             groups.setdefault(self._bucket_for(len(r.prompt)),
                               []).append((slot, r))
@@ -251,25 +432,57 @@ class ContinuousBatcher:
         self.requests.Push(req)
 
     def admit(self) -> int:
-        """Fill free slots from the request stream (batched prefill)."""
-        free = [i for i, r in enumerate(self._slot_req) if r is None]
-        pairs: List[Tuple[int, Request]] = []
+        """Fill free slots from the request stream.
+
+        Paged: each placed request reserves pages (or waits — admission
+        backpressure) and enters chunked prefill.  Dense: one batched
+        padded prefill per bucket."""
+        busy = ({a.slot for a in self._admitting} if self.paged else set())
+        free = [i for i, r in enumerate(self._slot_req)
+                if r is None and i not in busy]
+        if not self.paged:
+            pairs: List[Tuple[int, Request]] = []
+            for slot in free:
+                r = self._next_request()
+                if r is None:
+                    break
+                pairs.append((slot, r))
+            if pairs:
+                self._admit_batch(pairs)
+            return len(pairs)
+        admitted = 0
         for slot in free:
-            r = self.requests.TryPop()
+            r = self._next_request()
             if r is None:
                 break
-            pairs.append((slot, r))
-        if pairs:
-            self._admit_batch(pairs)
-        return len(pairs)
+            if len(r.prompt) >= self.max_seq:
+                self._reject(r)
+                continue
+            if self._pages_needed(r) > self._alloc.n_pages:
+                self._reject(r)    # can never fit, even in an empty pool
+                continue
+            if not self._try_admit_paged(r, slot):
+                # pool dry: hold the request at the FIFO head until a
+                # retire frees pages — never an error.
+                self._pending.appendleft(r)
+                break
+            admitted += 1
+        return admitted
 
     def step(self) -> int:
         """One batched decode step; returns number of sequences retired."""
         if all(r is None for r in self._slot_req):
             return 0
-        (self.cache, self.last_tok, self.pos, self.remaining, self.active,
-         out) = self._step(self.params, self.cache, self.last_tok, self.pos,
-                           self.remaining, self.active)
+        if self.paged:
+            (self.pools, self.last_tok, self.pos, self.remaining,
+             self.active, out) = self._step(
+                self.params, self.pools, self.block_tab, self.last_tok,
+                self.pos, self.remaining, self.active)
+        else:
+            (self.cache, self.last_tok, self.pos, self.remaining,
+             self.active, out) = self._step(
+                self.params, self.cache, self.last_tok, self.pos,
+                self.remaining, self.active)
         out = np.asarray(out)                  # the ONLY per-step transfer
         toks, finished = out[0], out[1]
         done = 0
@@ -280,6 +493,8 @@ class ContinuousBatcher:
             if finished[i]:
                 r.out.close()
                 self._slot_req[i] = None
+                if self.paged:
+                    self._release_slot(i)
                 done += 1
         self.steps += 1
         self.retired += done
@@ -288,23 +503,43 @@ class ContinuousBatcher:
     def run(self, total_requests: int, *, poll_timeout: float = 1.0) -> None:
         """Batcher PE: admit + decode until ``total_requests`` retire.
 
-        When every slot is idle the batcher blocks on the request stream
+        Paged mode interleaves chunked prefill with decode:
+        ``prefill_interleave`` decode steps run between consecutive
+        prompt chunks (0 = prefill drains before any decode), so a long
+        admission never freezes in-flight slots for a full prefill.
+
+        When everything is idle the batcher blocks on the request stream
         with a timeout + re-check loop (never an unbounded ``Pop``): if a
         producer dies without closing the stream, the batcher keeps
         polling instead of deadlocking, and a closed stream ends the
-        loop cleanly."""
+        loop cleanly.  An idle-path arrival is re-queued through
+        ``admit()`` so the allocator — not a hardcoded slot — picks its
+        placement."""
+        decodes_since_chunk = 0
         while self.retired < total_requests:
             self.admit()
-            if all(r is None for r in self._slot_req):
-                try:
-                    r = self.requests.Pop(timeout=poll_timeout)
-                except TimeoutError:
-                    continue                   # re-check; producer may be slow
-                except StreamClosed:
-                    return                     # no more work will ever arrive
-                self._admit_batch([(0, r)])
+            busy = any(r is not None for r in self._slot_req)
+            if self.paged and self._admitting:
+                if busy and decodes_since_chunk < self.prefill_interleave:
+                    self.step()
+                    decodes_since_chunk += 1
+                else:
+                    self._prefill_step()
+                    decodes_since_chunk = 0
                 continue
-            self.step()
+            if busy:
+                self.step()
+                continue
+            if self._pending:
+                continue           # waiting on pages with idle slots:
+                                   # admit() above will retry/reject.
+            try:
+                r = self.requests.Pop(timeout=poll_timeout)
+            except TimeoutError:
+                continue                   # re-check; producer may be slow
+            except StreamClosed:
+                return                     # no more work will ever arrive
+            self._pending.appendleft(r)    # admit() places it next loop
 
 
 def drain(req: Request, timeout: float = 30.0) -> List[int]:

@@ -124,6 +124,76 @@ def make_sampling_serve_steps(cfg: ModelConfig, batch: int, max_seq: int,
     return (jax.jit(prefill), jax.jit(decode, donate_argnums=(1,)))
 
 
+# --- paged serving steps (page-pool KV + block tables) --------------------------------
+#
+# The continuous batcher's paged mode drives two jitted programs:
+#
+# * ``make_paged_decode_step`` — ONE batched call advances every slot
+#   (pos is a per-slot vector, so no vmap is needed: the paged attention
+#   path handles per-row positions natively).  Inactive slots have their
+#   block-table rows masked to the invalid page id, so their cache writes
+#   scatter-drop and cannot corrupt pages that were freed and reallocated
+#   to a request that is still mid-admission.
+# * ``make_chunk_prefill_step`` — one prompt *chunk* for one slot, at a
+#   single compiled shape per chunk size (vs the dense path's
+#   n_slots-row padded prefill per pow2 bucket).  The final chunk also
+#   installs the slot's decode state (first sampled token, position,
+#   budget, active flag) on device, gated by the traced ``is_final`` flag
+#   so both chunk kinds share one compiled program.
+
+
+@functools.lru_cache(maxsize=32)
+def make_paged_decode_step(cfg: ModelConfig, max_seq: int):
+    """Jitted batched decode over paged KV: advances all slots at once."""
+    i32 = jnp.int32
+
+    def step_fn(params, pools, block_tab, last_tok, pos, remaining, active):
+        n_pages = jax.tree.leaves(pools)[0].shape[1]
+        bt = jnp.where(active[:, None], block_tab, n_pages)
+        cache = {"pages": pools, "block_tab": bt}
+        logits, new_pools = registry.forward(
+            cfg, params, {"tokens": last_tok[:, None]}, mode="decode",
+            cache=cache, pos=pos)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(i32)
+        nxt = jnp.where(active, nxt, last_tok)
+        pos = jnp.where(active, pos + 1, pos)
+        remaining = jnp.where(active, remaining - 1, remaining)
+        finished = active & ((remaining <= 0) | (pos >= max_seq - 1))
+        active = active & ~finished
+        out = jnp.stack([nxt, finished.astype(i32)])   # (2, n_slots)
+        return new_pools, nxt, pos, remaining, active, out
+
+    return jax.jit(step_fn, donate_argnums=(1, 3, 4, 5, 6))
+
+
+@functools.lru_cache(maxsize=32)
+def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int):
+    """Jitted single-request prefill chunk against the paged cache."""
+    i32 = jnp.int32
+
+    def chunk_fn(params, pools, block_tab, last_tok, pos, remaining, active,
+                 tokens, pos0, last_in_chunk, slot_idx, is_final, plen,
+                 max_new):
+        n_slots = block_tab.shape[0]
+        bt_row = jax.lax.dynamic_index_in_dim(block_tab, slot_idx, 0)
+        cache = {"pages": pools, "block_tab": bt_row}
+        logits, new_pools = registry.forward(
+            cfg, params, {"tokens": tokens}, mode="chunk", cache=cache,
+            pos=pos0, last_pos=last_in_chunk)
+        tok0 = jnp.argmax(logits[0, -1], -1).astype(i32)
+        # final chunk installs the slot's decode state; non-final chunks
+        # scatter-drop (idx == n_slots) and leave every vector untouched.
+        idx = jnp.where(is_final, slot_idx, n_slots)
+        last_tok = last_tok.at[idx].set(tok0, mode="drop")
+        pos = pos.at[idx].set(plen, mode="drop")
+        remaining = remaining.at[idx].set(max_new - 1, mode="drop")
+        alive = (max_new > 1) & (plen < max_seq - 1)
+        active = active.at[idx].set(alive, mode="drop")
+        return new_pools, last_tok, pos, remaining, active, tok0
+
+    return jax.jit(chunk_fn, donate_argnums=(1, 3, 4, 5, 6))
+
+
 def greedy_generate(cfg: ModelConfig, params, prompt_batch: Dict,
                     steps: int, max_seq: int, temperature: float = 0.0,
                     seed: int = 0):
