@@ -474,12 +474,124 @@ def bench_chunked_prefill_latency():
         RESULTS[name]["max_stall_us"] = round(pmax, 1)
 
 
+def bench_bursty_admission():
+    """Lazy decode growth vs reserve-at-admission, at EQUAL pool size:
+    a burst of short-prompt / long-decode requests arrives at once.
+    Reserve mode grabs ceil((plen + max_new)/page) pages per admission
+    and fills the pool after a couple of slots; lazy mode reserves only
+    prompt pages and admits the whole burst, growing decode pages on
+    demand (preempting the lowest-priority slot when the pool runs
+    dry — spilled requests resume token-identically).  main() exits
+    nonzero if lazy ever admits FEWER slots than reserve."""
+    import dataclasses
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    page = 8
+    n_req, plen, max_new, pool = ((8, 4, 28, 8) if SMOKE
+                                  else (16, 4, 60, 16))
+    max_seq = 64 if SMOKE else 128
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+               for _ in range(n_req)]
+
+    def one(reserve: bool):
+        c = dataclasses.replace(cfg, kv_page_size=page,
+                                kv_reserve_decode=reserve)
+        bat = ContinuousBatcher(c, params, n_slots=n_req, max_seq=max_seq,
+                                n_pages=pool)
+        reqs = [Request(rid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            bat.submit(r)
+        progress = True
+        while progress:                        # admit the burst, no decode
+            progress = bat.admit() > 0
+            while bat._admitting:
+                bat._prefill_step()
+                progress = True
+        inflight = sum(r is not None for r in bat._slot_req)
+        t0 = time.perf_counter()
+        bat.run(n_req)
+        dt = time.perf_counter() - t0
+        total = sum(len(drain(r)) for r in reqs)
+        return inflight, total / max(dt, 1e-9), bat
+
+    res_inflight, res_tps, _ = one(reserve=True)
+    lazy_inflight, lazy_tps, lazy_bat = one(reserve=False)
+    row("bursty_admission", 0.0,
+        f"pool_pages={pool};reserve_inflight={res_inflight};"
+        f"lazy_inflight={lazy_inflight};"
+        f"admit_x={lazy_inflight / max(res_inflight, 1):.1f};"
+        f"preemptions={lazy_bat.preemptions};resumes={lazy_bat.resumes};"
+        f"reserve_tok_per_s={res_tps:.0f};lazy_tok_per_s={lazy_tps:.0f}")
+    RESULTS["bursty_admission"]["reserve_inflight"] = res_inflight
+    RESULTS["bursty_admission"]["lazy_inflight"] = lazy_inflight
+
+
+def bench_paged_families():
+    """Paged-vs-dense throughput for the structured CacheLayouts that
+    used to fall back to dense: gemma3's local/global tree (window-aware
+    local page counts) and int8 KV (pages carry per-position scales).
+    Correctness (token equality) is asserted inline — a mismatch is a
+    loud bench failure, not a silent wrong-number row."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    n_req, max_new = (4, 4) if SMOKE else (8, 8)
+    max_seq = 64
+
+    def one(cfg, params, paged: bool):
+        c = dataclasses.replace(cfg, kv_page_size=8 if paged else 0,
+                                prefill_chunk=32)
+        bat = ContinuousBatcher(c, params, n_slots=4, max_seq=max_seq)
+        rng = np.random.default_rng(6)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            int(rng.integers(4, 17))
+                                            ).astype(np.int32),
+                        max_new=max_new)
+                for i in range(n_req)]
+        prod = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+        t0 = time.perf_counter()
+        prod.start()
+        bat.run(n_req)
+        prod.join()
+        dt = time.perf_counter() - t0
+        outs = [drain(r) for r in reqs]
+        return outs, sum(len(o) for o in outs) / max(dt, 1e-9), bat
+
+    for name, arch, kw in (
+            ("serve_family_gemma3", "gemma3-12b", {}),
+            ("serve_family_int8", "minitron-4b",
+             {"kv_cache_dtype": "int8"})):
+        cfg = dataclasses.replace(smoke_variant(configs.get(arch)), **kw)
+        params = registry.init(cfg, 0)
+        dense_out, dense_tps, _ = one(cfg, params, paged=False)
+        paged_out, paged_tps, bat = one(cfg, params, paged=True)
+        assert bat.paged, name
+        assert paged_out == dense_out, f"{name}: paged != dense tokens"
+        pool = sum(bat.n_pages.values())
+        row(name, 0.0,
+            f"dense_tok_per_s={dense_tps:.0f};"
+            f"paged_tok_per_s={paged_tps:.0f};pool_pages={pool};"
+            f"groups={','.join(sorted(bat.n_pages))};tokens_equal=1")
+
+
 # Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
 # workloads (fewer requests/lengths), so they write a separate
 # BENCH_serve_smoke.json — only same-mode snapshots are diffable.
 SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
               "batcher_throughput", "prefill_bucketed", "paged_capacity",
-              "serve_longprompt_dense", "serve_longprompt_paged")
+              "serve_longprompt_dense", "serve_longprompt_paged",
+              "bursty_admission", "serve_family_gemma3",
+              "serve_family_int8")
 
 
 def main(argv=None) -> None:
@@ -509,6 +621,8 @@ def main(argv=None) -> None:
     bench_prefill_bucketed()
     bench_paged_capacity()
     bench_chunked_prefill_latency()
+    bench_bursty_admission()
+    bench_paged_families()
 
     out_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)),
@@ -546,6 +660,17 @@ def main(argv=None) -> None:
                   f"full-prefill stall ({dense_stall:.0f}us) — interleave "
                   f"is not bounding inter-token latency", flush=True)
             raise SystemExit(1)
+    # 3. lazy decode growth must admit at least as many concurrent slots
+    #    as reserve-at-admission at equal pool size — the whole point of
+    #    deferring decode-page allocation.
+    burst = RESULTS.get("bursty_admission", {})
+    if burst and burst.get("lazy_inflight", 0) < burst.get(
+            "reserve_inflight", 0):
+        print(f"FATAL: lazy decode growth admitted fewer slots than "
+              f"reserve-at-admission at equal pool size: "
+              f"lazy={burst.get('lazy_inflight')} < "
+              f"reserve={burst.get('reserve_inflight')}", flush=True)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -6,23 +6,17 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Known-failing on the pinned jax==0.4.37 (the subprocess tests target
-# jax>=0.5 APIs: jax.sharding.AxisType / set_mesh — see ROADMAP open
-# items).  test_distributed.py is excluded wholesale: its multi-device
-# subprocess tests are additionally load-flaky under CI.
-python -m pytest -x -q \
-    --ignore=tests/test_distributed.py \
-    --deselect "tests/test_context.py::test_listing2_flow" \
-    --deselect "tests/test_context.py::test_kernel_introspection" \
-    --deselect "tests/test_context.py::test_async_execution" \
-    --deselect "tests/test_perf_flags.py::test_seq_sharded_int8_decode_distributed" \
-    --deselect "tests/test_roofline.py::test_collective_bytes_counted" \
-    --deselect "tests/test_system.py::test_dryrun_machinery_small_mesh"
+# The full suite runs clean on the pinned jax==0.4.37: repro.compat
+# installs the jax>=0.5 API shims (jax.sharding.AxisType / set_mesh,
+# jax.shard_map, lax.axis_size) the distributed/roofline tests target.
+python -m pytest -x -q
 
 # Serving fast-path benches (smoke): writes benchmarks/BENCH_serve_smoke.json
 # so every CI run leaves a machine-readable perf snapshot behind without
 # clobbering the committed full-run BENCH_serve.json trajectory.  The serve
-# set includes the paged-KV rows (paged_capacity, serve_longprompt_*);
-# benchmarks.run exits NONZERO — failing this script — if paged
-# tokens-in-flight capacity ever regresses below dense at equal KV memory.
+# set includes the paged-KV rows (paged_capacity, serve_longprompt_*,
+# bursty_admission, paged-vs-dense for gemma3/int8); benchmarks.run exits
+# NONZERO — failing this script — if paged tokens-in-flight capacity ever
+# regresses below dense, or if lazy decode growth admits fewer concurrent
+# slots than reserve-at-admission at equal pool size.
 python -m benchmarks.run --smoke --serve

@@ -1,0 +1,100 @@
+"""Forward-compat shims for the pinned jax 0.4.37.
+
+The test suite (and ``core/context.py``) target the jax >= 0.5 public
+API surface: ``jax.sharding.AxisType``, ``jax.sharding.set_mesh``,
+``jax.make_mesh(..., axis_types=...)`` and top-level ``jax.shard_map``
+with its ``check_vma`` kwarg.  The pinned 0.4.37 predates all four, so
+``install()`` grafts behavior-compatible stand-ins onto the jax modules
+once, at ``repro`` import time:
+
+* ``AxisType`` — an enum stand-in (0.4.x meshes have no axis types; the
+  value is accepted and dropped).
+* ``set_mesh(mesh)`` — a context manager entering the mesh the 0.4.x
+  way (``with mesh:``), which is what ``distributed.sharding``'s
+  thread-local fallback reads back.
+* ``jax.make_mesh`` — wrapped to swallow the ``axis_types`` kwarg.
+* ``jax.shard_map`` — ``jax.experimental.shard_map.shard_map`` with
+  ``check_vma`` mapped onto 0.4.x's ``check_rep``.
+* ``jax.lax.axis_size`` — the static mesh-axis size from the 0.4.x
+  trace-context axis env.
+
+Real jax >= 0.5 installs are left completely untouched: every shim is
+gated on the attribute being absent.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _make_axis_type():
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    return AxisType
+
+
+@contextlib.contextmanager
+def _set_mesh(mesh):
+    """0.4.x stand-in for ``jax.sharding.set_mesh``: enter the mesh
+    context so it lands in the thread-local resource env (which
+    ``distributed.sharding.current_mesh`` falls back to)."""
+    if mesh is None:
+        yield None
+        return
+    with mesh:
+        yield mesh
+
+
+def _wrap_make_mesh(orig):
+    if "axis_types" in inspect.signature(orig).parameters:
+        return orig
+
+    @functools.wraps(orig)
+    def make_mesh(*args, axis_types=None, **kwargs):
+        return orig(*args, **kwargs)
+
+    return make_mesh
+
+
+def _shard_map(f=None, /, *, mesh=None, in_specs=None, out_specs=None,
+               check_vma=None, **kwargs):
+    from jax.experimental.shard_map import shard_map as _sm
+    if check_vma is not None and "check_rep" not in kwargs:
+        kwargs["check_rep"] = check_vma
+    if f is None:
+        return functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma,
+                                 **kwargs)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               **kwargs)
+
+
+def _axis_size(axis_name):
+    from jax._src import core as _core
+    return _core.axis_frame(axis_name)
+
+
+def install() -> None:
+    """Idempotent: only fills in attributes 0.4.x is missing."""
+    sh = jax.sharding
+    if not hasattr(sh, "AxisType"):
+        sh.AxisType = _make_axis_type()
+    if not hasattr(sh, "set_mesh"):
+        sh.set_mesh = _set_mesh
+    if hasattr(jax, "make_mesh"):
+        jax.make_mesh = _wrap_make_mesh(jax.make_mesh)
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size
+
+
+install()

@@ -86,12 +86,19 @@ class ModelConfig:
     decode_flash: bool = False        # beyond-paper: sq=1 flash decode kernel
     kv_cache_dtype: str = "bfloat16"  # beyond-paper: "int8" quantized KV
     # paged serving (continuous batcher): page-pool KV with per-slot block
-    # tables.  0 = dense slot caches.  Recurrent families (ssm/hybrid) and
-    # structured caches (gemma3 local/global, MLA, int8 KV) fall back to
-    # dense regardless — see serve/batching.py.
+    # tables, pluggable per attention family via models.cache_layouts
+    # (flat GQA, gemma3 local/global ring-of-pages, MLA latent pages,
+    # int8 pages with per-position scales).  0 = dense slot caches.
+    # Recurrent families (ssm/hybrid) have O(1)/slot state — nothing to
+    # page — and always use the dense path.
     kv_page_size: int = 0
     prefill_chunk: int = 0            # chunked-prefill chunk tokens (0 = auto)
     prefill_interleave: int = 1       # decode steps between prefill chunks
+    # reserve decode pages up-front at admission (plen + max_new) instead
+    # of the default lazy growth (prompt pages only; decode pages are
+    # allocated on demand, preempting the lowest-priority slot when the
+    # pool runs dry).  Kept as a knob for A/B benchmarking.
+    kv_reserve_decode: bool = False
     embed_std: float = 0.02
 
     # -- derived -----------------------------------------------------------------

@@ -334,9 +334,21 @@ def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 # always a fetchable page).
 
 
-def _flash_decode_paged_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
-                               m_scr, l_scr, acc_scr, *, scale: float,
-                               window: Optional[int], page: int, hkv: int):
+def _flash_decode_paged_kernel(*refs, scale: float, window: Optional[int],
+                               page: int, hkv: int, has_base: bool,
+                               quantized: bool):
+    """Refs: [pos, bt(, page_base)] prefetch, [q, k, v(, ks, vs)] inputs,
+    o output, (m, l, acc) scratch — optional refs keyed by the static
+    ``has_base``/``quantized`` flags."""
+    n_pre = 3 if has_base else 2
+    pos_ref = refs[0]
+    pb_ref = refs[2] if has_base else None
+    q_ref, k_ref, v_ref = refs[n_pre:n_pre + 3]
+    ks_ref = refs[n_pre + 3] if quantized else None
+    vs_ref = refs[n_pre + 4] if quantized else None
+    o_ref = refs[-4]
+    m_scr, l_scr, acc_scr = refs[-3:]
+
     i = pl.program_id(0)
     jk = pl.program_id(1)
     nk = pl.num_programs(1)
@@ -348,8 +360,13 @@ def _flash_decode_paged_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    k_start = jk * page
+    # ``page_base`` (ring-of-pages groups): the logical base position of
+    # table entry jk, reconstructed by the caller — negative for slots
+    # never written.  Flat layouts keep the static jk * page base.
+    k_start = pb_ref[i // hkv, jk] if has_base else jk * page
     active = k_start <= pos                           # skip future pages
+    if has_base:
+        active &= k_start >= 0                        # skip unwritten slots
     if window is not None:
         active &= k_start + page - 1 > pos - window   # skip out-of-window
 
@@ -358,11 +375,17 @@ def _flash_decode_paged_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32) * scale      # (group, d)
         k = k_ref[0, 0].astype(jnp.float32)           # (page, d)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # int8 pages dequantize in VMEM: per-position bf16 scales.
+            k = k * ks_ref[0, 0].astype(jnp.float32)
+            v = v * vs_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)       # (group, page)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         valid = kpos <= pos
+        if has_base:
+            valid &= kpos >= 0
         if window is not None:
             valid &= kpos > pos - window
         s = jnp.where(valid, s, NEG_INF)
@@ -387,6 +410,9 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                                  v_pages: jnp.ndarray,
                                  block_tab: jnp.ndarray, pos: jnp.ndarray,
                                  window: Optional[int] = None,
+                                 page_base: Optional[jnp.ndarray] = None,
+                                 k_scale_pages: Optional[jnp.ndarray] = None,
+                                 v_scale_pages: Optional[jnp.ndarray] = None,
                                  scale: Optional[float] = None,
                                  interpret: Optional[bool] = None
                                  ) -> jnp.ndarray:
@@ -394,11 +420,21 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     q: (b, hq, 1, d); k_pages/v_pages: (n_pages, hkv, page, d) shared
     pools; block_tab: (b, n_blocks) int32 physical page per logical page
-    (unallocated entries must be clamped into [0, n_pages) by the caller —
-    they are skipped/masked, but the index map still has to name a real
+    (unallocated entries are clamped into [0, n_pages) — they are
+    skipped/masked, but the index map still has to name a fetchable
     page); pos: (b,) int32 decode positions.  ``window`` applies the
-    (pos - window, pos] band on *logical* positions.  Returns
-    (b, hq, 1, d), matching ``ref.paged_attention_ref``.
+    (pos - window, pos] band on *logical* positions.
+
+    ``page_base`` (optional, (b, n_blocks) int32): per-entry logical
+    base position for ring-of-pages window groups, where table entry j
+    holds logical page ``l ≡ j (mod n_blocks)``; negative bases mark
+    never-written slots.  Defaults to the flat ``j * page``.
+
+    ``k_scale_pages``/``v_scale_pages`` (optional, (n_pages, hkv, page,
+    1) bf16): per-position scales for int8 pools — pages dequantize
+    in VMEM right after the gather, so the dense bf16 view is never
+    materialized in HBM.  Returns (b, hq, 1, d), matching
+    ``ref.paged_attention_ref``.
     """
     b, hq, sq, d = q.shape
     if sq != 1:
@@ -406,10 +442,14 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     n_pages, hkv, page, _ = k_pages.shape
     if hq % hkv:
         raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    if (k_scale_pages is None) != (v_scale_pages is None):
+        raise ValueError("k/v scale pages must be passed together")
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / np.sqrt(d)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    has_base = page_base is not None
+    quantized = k_scale_pages is not None
 
     n_blocks = block_tab.shape[1]
     bh = b * hkv
@@ -419,24 +459,35 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     kernel = functools.partial(
         _flash_decode_paged_kernel, scale=scale, window=window, page=page,
-        hkv=hkv)
+        hkv=hkv, has_base=has_base, quantized=quantized)
+
+    n_pre = 3 if has_base else 2
+
+    def _qmap(i, jk, *prefs):
+        return (i, 0, 0)
+
+    def _pmap(i, jk, *prefs, h=hkv):
+        return (prefs[1][i // h, jk], i % h, 0, 0)
+
+    in_specs = [pl.BlockSpec((1, group, d), _qmap),
+                # the paged gather: physical page picked by the block table.
+                pl.BlockSpec((1, 1, page, d), _pmap),
+                pl.BlockSpec((1, 1, page, d), _pmap)]
+    inputs = [q3, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, page, 1), _pmap),
+                     pl.BlockSpec((1, 1, page, 1), _pmap)]
+        inputs += [k_scale_pages, v_scale_pages]
+
+    prefetch = [pos_arr, bt]
+    if has_base:
+        prefetch.append(jnp.asarray(page_base, jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                        # pos, block table
+        num_scalar_prefetch=n_pre,                    # pos, bt(, page_base)
         grid=(bh, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, group, d),
-                         lambda i, jk, pos_ref, bt_ref: (i, 0, 0)),
-            # the paged gather: physical page picked by the block table.
-            pl.BlockSpec((1, 1, page, d),
-                         lambda i, jk, pos_ref, bt_ref, h=hkv: (
-                             bt_ref[i // h, jk], i % h, 0, 0)),
-            pl.BlockSpec((1, 1, page, d),
-                         lambda i, jk, pos_ref, bt_ref, h=hkv: (
-                             bt_ref[i // h, jk], i % h, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, group, d),
-                               lambda i, jk, pos_ref, bt_ref: (i, 0, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, group, d), _qmap),
         scratch_shapes=[
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, 1), jnp.float32),
@@ -449,6 +500,6 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, group, d), q.dtype),
         interpret=interpret,
-    )(pos_arr, bt, q3, k_pages, v_pages)
+    )(*prefetch, *inputs)
 
     return out.reshape(b, hq, d)[:, :, None, :]

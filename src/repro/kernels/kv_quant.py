@@ -9,6 +9,14 @@ lane-aligned trailing dim.
 Used by the §Perf int8 decode path (`kv_cache_dtype="int8"`): the XLA
 formulation lives in ``models/layers._kv_quantize``; this kernel is the
 TPU hot-path equivalent, validated against it in interpret mode.
+
+The *paged* int8 KV cache reuses exactly this granularity: each page
+pool carries int8 ``k``/``v`` pages plus bf16 ``k_scale``/``v_scale``
+pages of shape (n_pages, hkv, page, 1) — one scale per (head, position)
+row, matching the (rows, 1) scales emitted here — and
+``flash_attention_decode_paged`` applies them in VMEM right after the
+block-table gather (see ``models/cache_layouts`` and
+``models/layers.attention_apply_paged``).
 """
 
 from __future__ import annotations

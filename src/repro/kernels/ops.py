@@ -36,16 +36,25 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
 @partial(jax.jit, static_argnames=("window", "use_pallas", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_tab, pos, *,
                            window: Optional[int] = None,
+                           page_base=None, k_scale_pages=None,
+                           v_scale_pages=None,
                            use_pallas: bool = False, interpret: bool = True):
     """Paged-KV decode attention: q (b,hq,1,d) against (n_pages, hkv,
-    page, d) pools gathered through (b, n_blocks) block tables."""
+    page, d) pools gathered through (b, n_blocks) block tables.
+    ``page_base`` carries ring-of-pages logical bases (window-bounded
+    groups); ``*_scale_pages`` dequantize int8 pools in-kernel."""
     if use_pallas:
         from .flash_attention import flash_attention_decode_paged
         return flash_attention_decode_paged(q, k_pages, v_pages, block_tab,
                                             pos, window=window,
+                                            page_base=page_base,
+                                            k_scale_pages=k_scale_pages,
+                                            v_scale_pages=v_scale_pages,
                                             interpret=interpret)
     return ref.paged_attention_ref(q, k_pages, v_pages, block_tab, pos,
-                                   window=window)
+                                   window=window, page_base=page_base,
+                                   k_scale_pages=k_scale_pages,
+                                   v_scale_pages=v_scale_pages)
 
 
 @partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))

@@ -59,6 +59,9 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, block_tab: jnp.ndarray,
                         pos: jnp.ndarray, window: Optional[int] = None,
+                        page_base: Optional[jnp.ndarray] = None,
+                        k_scale_pages: Optional[jnp.ndarray] = None,
+                        v_scale_pages: Optional[jnp.ndarray] = None,
                         scale: Optional[float] = None) -> jnp.ndarray:
     """Paged-KV decode attention oracle (the obviously-correct gather path).
 
@@ -67,28 +70,39 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     logical page index to a physical page (entries >= n_pages are treated
     as unallocated and may hold anything — they are masked, not read for
     real positions); pos: (b,) int32 — the position being decoded (logical
-    positions <= pos are live).  Gathers every sequence's pages into a
-    dense (b, hkv, n_blocks·page, d) view, then runs plain masked
-    attention.  The Pallas kernel must match this to tolerance.
+    positions <= pos are live).  ``page_base`` (b, n_blocks) overrides the
+    flat ``j * page`` logical base position per table entry (ring-of-pages
+    window groups; negative = never written).  ``k_scale_pages`` /
+    ``v_scale_pages`` (n_pages, hkv, page, 1) dequantize int8 pools.
+    Gathers every sequence's pages into a dense
+    (b, hkv, n_blocks·page, d) view, then runs plain masked attention.
+    The Pallas kernel must match this to tolerance.
     """
     b, hq, sq, d = q.shape
     n_pages, hkv, page, _ = k_pages.shape
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / np.sqrt(d)
     bt = jnp.minimum(block_tab, n_pages - 1)          # clamp unallocated
-    kd = k_pages[bt].transpose(0, 2, 1, 3, 4)         # (b, hkv, nb, page, d)
-    vd = v_pages[bt].transpose(0, 2, 1, 3, 4)
+    kd = k_pages[bt].astype(jnp.float32)              # (b, nb, hkv, page, d)
+    vd = v_pages[bt].astype(jnp.float32)
+    if k_scale_pages is not None:
+        kd = kd * k_scale_pages[bt].astype(jnp.float32)
+        vd = vd * v_scale_pages[bt].astype(jnp.float32)
     S = bt.shape[1] * page
-    kd = kd.reshape(b, hkv, S, d).astype(jnp.float32)
-    vd = vd.reshape(b, hkv, S, d).astype(jnp.float32)
+    kd = kd.transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, d)
+    vd = vd.transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, d)
     kd = jnp.repeat(kd, group, axis=1)
     vd = jnp.repeat(vd, group, axis=1)
     qf = q.astype(jnp.float32) * scale
     logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kd)
-    kpos = jnp.arange(S)
-    mask = kpos[None, :] <= pos[:, None]              # (b, S)
+    if page_base is not None:
+        kpos = (page_base[:, :, None]
+                + jnp.arange(page)[None, None, :]).reshape(b, S)
+    else:
+        kpos = jnp.broadcast_to(jnp.arange(S)[None, :], (b, S))
+    mask = (kpos <= pos[:, None]) & (kpos >= 0)       # (b, S)
     if window is not None:
-        mask &= kpos[None, :] > pos[:, None] - window
+        mask &= kpos > pos[:, None] - window
     logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, vd)

@@ -67,9 +67,13 @@ def main(argv=None):
         out = drain(r)
         total_tokens += len(out)
         print(f"req {r.rid}: {out[:12]}{'...' if len(out) > 12 else ''}")
-    mode = (f"paged(page={batcher.page_size},pool={batcher.n_pages},"
-            f"chunks={batcher.prefill_chunks})" if batcher.paged
-            else "dense")
+    if batcher.paged:
+        pool = ",".join(f"{k}:{v}" for k, v in sorted(batcher.n_pages.items()))
+        mode = (f"paged(page={batcher.page_size},pool={pool},"
+                f"chunks={batcher.prefill_chunks},"
+                f"preempt={batcher.preemptions})")
+    else:
+        mode = "dense"
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s, {batcher.steps} decode steps, "
           f"{mode}, "

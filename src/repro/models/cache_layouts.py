@@ -1,0 +1,190 @@
+"""Pluggable paged-KV cache layouts (the hlslib move: one reusable
+abstraction instead of per-family special cases).
+
+A ``CacheLayout`` describes how one attention family's KV state maps
+onto shared device page pools:
+
+* **page groups** — independently allocated page-id spaces.  Most
+  layouts have one; gemma3 has two (``local``/``global``) so its
+  sliding-window layers can keep a *window-bounded* page count while the
+  global layers grow with the sequence.
+* **pool decls** — the declarative per-layer pool tensors (stacked for
+  scan-over-layers), including quantization side-cars (int8 KV pages
+  carry per-position bf16 scale pages) and MLA's latent pages (paged
+  over the compressed ``kv_lora_rank`` dim, no head axis).
+* **page accounting** — block-table width and pages-needed-for-length,
+  the numbers the batcher's allocator and lazy decode growth consult.
+  Windowed (ring) groups cap at ``ceil(w/page) + 1`` blocks and then
+  reuse their pages in place; flat groups grow with the sequence.
+* **spill/restore** — device->host page extraction and re-insertion,
+  used by slot preemption to park a sequence's KV host-side and resume
+  it bit-identically later.
+
+The model-side read/write paths (scatter-append, gather, masks, the
+flash block-table kernel) live in ``models.layers`` /
+``kernels.flash_attention`` and key off the same layout via
+``get_layout``; the batcher (``serve.batching``) only ever talks to the
+layout API, so adding a family means adding a layout here — no batcher
+edits.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .params import stack_decls as _stack_decls
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def ring_blocks(window: int, page: int) -> int:
+    """Table width of a ring-of-pages windowed group.  ``ceil(w/p) + 1``
+    slots guarantee every position in the live band ``(pos - w, pos]``
+    maps to a distinct slot for any alignment, so a page whose slot is
+    being rewritten is always fully outside the window."""
+    return _ceil_div(window, page) + 1
+
+
+class PageGroup:
+    """One independently allocated page-id space of a layout."""
+
+    def __init__(self, name: str, window: Optional[int] = None):
+        self.name = name
+        self.window = window          # ring-of-pages group when set
+
+    @property
+    def ring(self) -> bool:
+        return self.window is not None
+
+
+class CacheLayout:
+    """Base: single flat bf16 {k, v} group (dense / moe GQA caches)."""
+
+    def __init__(self, cfg, page_size: int):
+        self.cfg = cfg
+        self.page = int(page_size)
+
+    # -- page groups / accounting --------------------------------------------------
+
+    @property
+    def groups(self) -> Tuple[PageGroup, ...]:
+        return (PageGroup("kv"),)
+
+    def group(self, name: str) -> PageGroup:
+        for g in self.groups:
+            if g.name == name:
+                return g
+        raise KeyError(name)
+
+    def n_blocks(self, name: str, max_seq: int) -> int:
+        """Block-table width for a group."""
+        g = self.group(name)
+        flat = _ceil_div(max_seq, self.page)
+        if g.ring:
+            return min(ring_blocks(g.window, self.page), flat)
+        return flat
+
+    def blocks_for(self, name: str, n_tokens: int, max_seq: int) -> int:
+        """Pages a sequence holding ``n_tokens`` positions needs in this
+        group.  Ring groups saturate at the table width: past that the
+        ring reuses its own pages in place, so decode growth stops."""
+        return min(_ceil_div(max(n_tokens, 0), self.page),
+                   self.n_blocks(name, max_seq))
+
+    # -- pool declarations -----------------------------------------------------------
+
+    def pool_decls(self, n_pages: Dict[str, int]):
+        """{group: per-layer pool decl tree, stacked over layers}."""
+        return {"kv": _stack_decls(
+            L.attention_paged_cache_decl(self.cfg, n_pages["kv"], self.page),
+            self.cfg.n_layers)}
+
+    def page_axis(self, name: str) -> int:
+        """Index of the page axis in every pool leaf of the group."""
+        return 1
+
+    # -- spill / restore (slot preemption) ---------------------------------------------
+
+    def spill(self, pools, name: str, pages: Sequence[int]):
+        """Copy the given physical pages (every layer) to host arrays."""
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        ax = self.page_axis(name)
+        return jax.tree.map(lambda a: np.asarray(jnp.take(a, idx, axis=ax)),
+                            pools[name])
+
+    def restore(self, pools, name: str, data, pages: Sequence[int]):
+        """Scatter spilled page data back into (possibly different)
+        physical pages; returns the updated pools dict."""
+        ax = self.page_axis(name)
+        sel = (slice(None),) * ax + (np.asarray(pages, np.int32),)
+        new = jax.tree.map(
+            lambda a, d: a.at[sel].set(jnp.asarray(d).astype(a.dtype)),
+            pools[name], data)
+        out = dict(pools)
+        out[name] = new
+        return out
+
+
+class LocalGlobalLayout(CacheLayout):
+    """gemma3's local/global tree: the ``local`` group serves the
+    sliding-window layers with a window-bounded ring of pages; the
+    ``global`` group serves the full-attention layers and grows with the
+    sequence."""
+
+    @property
+    def groups(self) -> Tuple[PageGroup, ...]:
+        return (PageGroup("local", window=self.cfg.sliding_window),
+                PageGroup("global"))
+
+    def pool_decls(self, n_pages: Dict[str, int]):
+        cfg = self.cfg
+        G, per = cfg.group_layout
+        n_local = cfg.local_global_pattern
+        base = L.attention_paged_cache_decl
+        loc = _stack_decls(base(cfg, n_pages["local"], self.page), n_local)
+        glo = _stack_decls(base(cfg, n_pages["global"], self.page),
+                           per - n_local)
+        return {"local": _stack_decls(loc, G),
+                "global": _stack_decls(glo, G)}
+
+    def page_axis(self, name: str) -> int:
+        return 2                      # leaves are (G, per_kind, n_pages, ...)
+
+
+class LatentLayout(CacheLayout):
+    """MLA (deepseek): pages over the compressed latent dim — each page
+    row is ``(page, kv_lora_rank)`` + the shared rope head, no per-head
+    axis at all (the MLA memory win, paged)."""
+
+    @property
+    def groups(self) -> Tuple[PageGroup, ...]:
+        return (PageGroup("latent"),)
+
+    def pool_decls(self, n_pages: Dict[str, int]):
+        cfg = self.cfg
+        Ld = cfg.first_dense_layers
+        Ln = cfg.n_layers - Ld
+        base = L.mla_paged_cache_decl(cfg, n_pages["latent"], self.page)
+        return {"latent": {"first": _stack_decls(base, Ld),
+                           "rest": _stack_decls(base, Ln)}}
+
+
+@functools.lru_cache(maxsize=64)
+def get_layout(cfg, page_size: int) -> Optional[CacheLayout]:
+    """The layout registry.  ``None`` = family has no pageable cache
+    (recurrent ssm/hybrid state is O(1)/slot — nothing to page)."""
+    if cfg.family not in ("dense", "moe"):
+        return None
+    if cfg.mla:
+        return LatentLayout(cfg, page_size)
+    if cfg.local_global_pattern:
+        return LocalGlobalLayout(cfg, page_size)
+    return CacheLayout(cfg, page_size)

@@ -487,29 +487,57 @@ def attention_apply(cfg, p, x, *, window: Optional[int] = None,
     return x + y, new_cache
 
 
+def _ring_page_base(pos: jnp.ndarray, page: int, n_blocks: int
+                    ) -> jnp.ndarray:
+    """Logical base position of each ring-table slot.
+
+    Slot j of a ring-of-pages table holds the LATEST logical page
+    l ≡ j (mod n_blocks) with l <= pos // page — the page-granular
+    analogue of the dense ring cache's mask-aware slot math.  Slots whose
+    reconstructed page is negative (never written yet) get a negative
+    base, which readers mask via kpos >= 0.  pos: (b,); returns (b,
+    n_blocks) int32.
+    """
+    cur = pos[:, None] // page                               # (b, 1)
+    j = jnp.arange(n_blocks)[None, :]
+    l = cur - ((cur - j) % n_blocks)                         # (b, nb)
+    return (l * page).astype(jnp.int32)
+
+
 def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
                           theta: Optional[float] = None,
                           pages: Dict[str, jnp.ndarray],
-                          block_tab: jnp.ndarray, pos: jnp.ndarray):
+                          block_tab: jnp.ndarray, pos: jnp.ndarray,
+                          ring: bool = False,
+                          last_idx: Optional[jnp.ndarray] = None):
     """Pre-norm attention against a *paged* KV cache.
 
     x: (b, s, d) — s == 1 is a decode step, s > 1 a prefill chunk whose
-    tokens sit at positions pos..pos+s-1.  ``pages``: {"k", "v"} pools of
-    shape (n_pages, hkv, page, hd) for THIS layer.  ``block_tab``:
-    (b, n_blocks) int32, entries >= n_pages meaning unallocated (writes
-    through them drop; reads are clamped and masked).  ``pos``: (b,)
-    int32 start position per row.
+    tokens sit at positions pos..pos+s-1.  ``pages``: this layer's pool
+    leaves — {"k", "v"} of shape (n_pages, hkv, page, hd), plus
+    {"k_scale", "v_scale"} (n_pages, hkv, page, 1) when
+    ``cfg.kv_cache_dtype == "int8"`` (pages carry per-position scales).
+    ``block_tab``: (b, n_blocks) int32, entries >= n_pages meaning
+    unallocated (writes through them drop; reads are clamped and
+    masked).  ``pos``: (b,) int32 start position per row.  ``last_idx``
+    (chunk mode): per-row index of the last TRUE token in the chunk —
+    padded tail positions are never written.
 
-    Write-then-read: the chunk's K/V are scattered into the pool first,
-    then attention reads the updated pages, so the current token(s) see
-    themselves without a separate merge.  Numerics mirror the dense
-    path's rounding exactly: a prefill *chunk* (s > 1) attends its own
-    positions at full precision (dense prefill never rounds
-    within-prompt K/V through the cache), while a *decode* step (s == 1)
-    attends the pool-rounded values (dense decode reads the bf16 cache).
-    Sliding windows use the (qpos - window, qpos] band on logical
-    positions — paged caches keep the flat layout (no ring), trading the
-    window-bounded footprint for page-granular alloc/free.  Returns
+    ``ring=False`` (flat layout): logical page j lives at table entry j;
+    sliding windows apply the (qpos - window, qpos] band in the mask,
+    trading the window-bounded footprint for page-granular alloc/free.
+    ``ring=True`` (window-bounded layout, gemma3 local layers): table
+    entry j holds logical page l ≡ j (mod n_blocks) and pages are reused
+    in place once the table wraps, so the layer's page count stays
+    O(window/page) forever; readers reconstruct each entry's logical
+    base position from ``pos`` (see ``_ring_page_base``).
+
+    Reads take the *pre-write* pool state concatenated with the current
+    chunk's own K/V, so numerics mirror the dense path's rounding
+    exactly: a prefill chunk (s > 1) attends its own positions at full
+    precision (dense prefill never rounds within-prompt K/V through the
+    cache), while a decode step (s == 1) attends the pool-rounded values
+    (dense decode reads the quantized/bf16 cache).  Returns
     (y, new_pages).
     """
     theta = theta if theta is not None else cfg.rope_theta
@@ -522,49 +550,104 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
     k = rope(k, pos_h, theta).transpose(0, 2, 1, 3)  # (b, hkv, s, hd)
     v = v.transpose(0, 2, 1, 3)
 
+    quantized = cfg.kv_cache_dtype == "int8"
     pk, pv = pages["k"], pages["v"]
     n_pages, hkv, page, hd = pk.shape
     n_blocks = block_tab.shape[1]
-    # positions past the table (padded chunk tail) must write NOWHERE:
-    # route them to the invalid page id so the scatter drops them.
-    logical = positions // page                                     # (b, s)
-    wp = jnp.take_along_axis(block_tab,
-                             jnp.minimum(logical, n_blocks - 1), axis=1)
-    wp = jnp.where(logical < n_blocks, wp, n_pages)
-    wo = positions % page
-    pk = pk.at[wp, :, wo].set(k.transpose(0, 2, 1, 3).astype(pk.dtype),
-                              mode="drop")
-    pv = pv.at[wp, :, wo].set(v.transpose(0, 2, 1, 3).astype(pv.dtype),
-                              mode="drop")
-    new_pages = {"k": pk, "v": pv}
 
-    if cfg.decode_flash and s == 1:
-        from ..kernels.flash_attention import flash_attention_decode_paged
-        o = flash_attention_decode_paged(q, pk, pv, block_tab, pos,
-                                         window=window)
+    # --- append: scatter the chunk's K/V into the pool -------------------------
+    logical = positions // page                                     # (b, s)
+    if ring:
+        tab_idx = logical % n_blocks
+        # only pages still live at the end of the true chunk are
+        # written; an in-chunk wrap must not clobber pages the NEXT
+        # positions still need.
+        end = pos + (last_idx if last_idx is not None
+                     else jnp.full((b,), s - 1, jnp.int32))         # (b,)
+        keep = logical > (end // page)[:, None] - n_blocks
     else:
+        tab_idx = jnp.minimum(logical, n_blocks - 1)
+        keep = logical < n_blocks
+    if last_idx is not None:
+        keep &= jnp.arange(s)[None, :] <= last_idx[:, None]
+    wp = jnp.take_along_axis(block_tab, tab_idx, axis=1)
+    wp = jnp.where(keep, wp, n_pages)                # invalid id -> dropped
+    wo = positions % page
+
+    kc = k.transpose(0, 2, 1, 3)                     # (b, s, hkv, hd)
+    vc = v.transpose(0, 2, 1, 3)
+    new_pages = dict(pages)
+    if quantized:
+        kq, ks = _kv_quantize(kc)                    # int8 + (b,s,hkv,1) scale
+        vq, vs = _kv_quantize(vc)
+        new_pages["k"] = pk.at[wp, :, wo].set(kq, mode="drop")
+        new_pages["v"] = pv.at[wp, :, wo].set(vq, mode="drop")
+        new_pages["k_scale"] = pages["k_scale"].at[wp, :, wo].set(
+            ks, mode="drop")
+        new_pages["v_scale"] = pages["v_scale"].at[wp, :, wo].set(
+            vs, mode="drop")
+    else:
+        new_pages["k"] = pk.at[wp, :, wo].set(kc.astype(pk.dtype),
+                                              mode="drop")
+        new_pages["v"] = pv.at[wp, :, wo].set(vc.astype(pv.dtype),
+                                              mode="drop")
+
+    # --- read ------------------------------------------------------------------
+    page_base = _ring_page_base(pos, page, n_blocks) if ring else None
+    if cfg.decode_flash and s == 1:
+        # write-then-read through the block-table kernel.
+        from ..kernels.flash_attention import flash_attention_decode_paged
+        o = flash_attention_decode_paged(
+            q, new_pages["k"], new_pages["v"], block_tab, pos,
+            window=window, page_base=page_base,
+            k_scale_pages=new_pages.get("k_scale"),
+            v_scale_pages=new_pages.get("v_scale"))
+    else:
+        # gather the PRE-write pool state + overlay the chunk's own K/V.
         bt = jnp.minimum(block_tab, n_pages - 1)
-        S = bt.shape[1] * page
-        kd = pk[bt].transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
-        vd = pv[bt].transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, hd)
-        kd, vd = kd.astype(q.dtype), vd.astype(q.dtype)
-        # overlay the current positions: full precision for a chunk
-        # (s > 1, matching dense prefill), pool-rounded for decode
-        # (s == 1, matching dense decode reading the stored cache).
-        kl, vl = k, v
-        if s == 1:
-            kl = k.astype(pk.dtype).astype(q.dtype)
-            vl = v.astype(pv.dtype).astype(q.dtype)
-        bidx = jnp.arange(b)[:, None]
-        kd = kd.at[bidx, :, positions].set(
-            kl.transpose(0, 2, 1, 3).astype(kd.dtype), mode="drop")
-        vd = vd.at[bidx, :, positions].set(
-            vl.transpose(0, 2, 1, 3).astype(vd.dtype), mode="drop")
-        kpos = jnp.arange(S)
-        mask = kpos[None, None, :] <= positions[:, :, None]   # (b, s, S)
+        S = n_blocks * page
+
+        def gather(pool):
+            g = pool[bt]                             # (b, nb, hkv, page, X)
+            return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, S, -1)
+
+        if quantized:
+            kd = _kv_dequantize(gather(pages["k"]), gather(pages["k_scale"]),
+                                q.dtype)
+            vd = _kv_dequantize(gather(pages["v"]), gather(pages["v_scale"]),
+                                q.dtype)
+            if s == 1:                               # pool-rounded own k/v
+                kl = _kv_dequantize(kq, ks, q.dtype).transpose(0, 2, 1, 3)
+                vl = _kv_dequantize(vq, vs, q.dtype).transpose(0, 2, 1, 3)
+            else:
+                kl, vl = k, v
+        else:
+            kd = gather(pages["k"]).astype(q.dtype)
+            vd = gather(pages["v"]).astype(q.dtype)
+            if s == 1:
+                kl = k.astype(pk.dtype).astype(q.dtype)
+                vl = v.astype(pv.dtype).astype(q.dtype)
+            else:
+                kl, vl = k, v
+        if ring:
+            kpos = (page_base[:, :, None]
+                    + jnp.arange(page)[None, None, :]).reshape(b, S)
+        else:
+            kpos = jnp.broadcast_to(jnp.arange(S)[None, :], (b, S))
+        K = jnp.concatenate([kd, kl], axis=2)        # (b, hkv, S + s, hd)
+        V = jnp.concatenate([vd, vl], axis=2)
+        kpos_cat = jnp.concatenate([kpos, positions], axis=1)   # (b, S+s)
+        # gathered entries are only valid STRICTLY before the chunk
+        # (stale/ring-relabeled slots carry kpos >= pos); own entries
+        # cover [pos, pos+s).
+        pre_ok = jnp.concatenate(
+            [(kpos >= 0) & (kpos < pos[:, None]),
+             jnp.ones((b, s), bool)], axis=1)        # (b, S+s)
+        mask = (kpos_cat[:, None, :] <= positions[:, :, None]) \
+            & pre_ok[:, None, :]
         if window is not None:
-            mask &= kpos[None, None, :] > positions[:, :, None] - window
-        o = attention_masked(q, kd, vd, mask)
+            mask &= kpos_cat[:, None, :] > positions[:, :, None] - window
+        o = attention_masked(q, K, V, mask)
     y = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
     y = constrain(y, "batch", None, "embed")
     return x + y, new_pages
@@ -573,9 +656,16 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
 def attention_paged_cache_decl(cfg, n_pages: int, page_size: int
                                ) -> Dict[str, Decl]:
     """One attention layer's shared page pool: (n_pages, hkv, page, hd).
-    The pool has no batch/slot axis — slots own *pages*, not rows."""
+    The pool has no batch/slot axis — slots own *pages*, not rows.
+    int8 KV pools additionally carry per-position bf16 scale pages."""
     shp = (n_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
     ax = (None, "kv_heads", None, None)
+    if cfg.kv_cache_dtype == "int8":
+        sshp = (n_pages, cfg.n_kv_heads, page_size, 1)
+        return {"k": Decl(shp, ax, jnp.int8, init="zeros"),
+                "v": Decl(shp, ax, jnp.int8, init="zeros"),
+                "k_scale": Decl(sshp, ax, jnp.bfloat16, init="zeros"),
+                "v_scale": Decl(sshp, ax, jnp.bfloat16, init="zeros")}
     return {"k": Decl(shp, ax, jnp.bfloat16, init="zeros"),
             "v": Decl(shp, ax, jnp.bfloat16, init="zeros")}
 
@@ -690,6 +780,100 @@ def mla_apply(cfg, p, x, *, cache=None, pos=None):
     y = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
     y = constrain(y, "batch", None, "embed")
     return x + y, new_cache
+
+
+def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
+                    block_tab: jnp.ndarray, pos: jnp.ndarray,
+                    last_idx: Optional[jnp.ndarray] = None):
+    """MLA absorbed attention against a *paged* compressed latent cache.
+
+    The pages hold the latent rows themselves — ``c_kv`` pages of shape
+    (n_pages, page, kv_lora_rank) and ``k_rope`` pages of
+    (n_pages, page, qk_rope_dim); there is no per-head axis at all, so a
+    page costs ``page · (lora + rope)`` bf16 values (the MLA memory win,
+    page-granular).  x: (b, s, d) — s == 1 decode, s > 1 a prefill
+    chunk at positions pos..pos+s-1.  Reads mirror the dense rounding:
+    a chunk attends its own rows at full precision, decode attends the
+    pool-rounded (bf16) rows.  Returns (y, new_pages).
+    """
+    b, s, d = x.shape
+    hq = cfg.n_heads
+    nope, rp, lora, vd = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                          cfg.kv_lora_rank, cfg.v_head_dim)
+    h = rmsnorm(x, p["norm"])
+    q = (h @ p["wq"]).reshape(b, s, hq, nope + rp)
+    dkv = h @ p["w_dkv"]
+    c_kv = rmsnorm(dkv[..., :lora], p["kv_norm"])            # (b, s, lora)
+    positions = pos[:, None] + jnp.arange(s)                 # (b, s)
+    k_rope = rope(dkv[..., lora:], positions, cfg.rope_theta)
+    q_nope = q[..., :nope]
+    q_rope = rope(q[..., nope:], positions[:, :, None], cfg.rope_theta)
+
+    cp, rpool = pages["c_kv"], pages["k_rope"]
+    n_pages, page, _ = cp.shape
+    n_blocks = block_tab.shape[1]
+
+    # append: scatter latent rows (padded chunk tails write nowhere).
+    logical = positions // page
+    keep = logical < n_blocks
+    if last_idx is not None:
+        keep &= jnp.arange(s)[None, :] <= last_idx[:, None]
+    wp = jnp.take_along_axis(block_tab,
+                             jnp.minimum(logical, n_blocks - 1), axis=1)
+    wp = jnp.where(keep, wp, n_pages)
+    wo = positions % page
+    new_pages = {
+        "c_kv": cp.at[wp, wo].set(c_kv.astype(cp.dtype), mode="drop"),
+        "k_rope": rpool.at[wp, wo].set(k_rope.astype(rpool.dtype),
+                                       mode="drop"),
+    }
+
+    # read: pre-write pool gather + own-chunk overlay.
+    bt = jnp.minimum(block_tab, n_pages - 1)
+    S = n_blocks * page
+    cc = cp[bt].reshape(b, S, lora).astype(F32)
+    cr = rpool[bt].reshape(b, S, rp).astype(F32)
+    if s == 1:                                       # pool-rounded own row
+        cl = c_kv.astype(cp.dtype).astype(F32)
+        rl = k_rope.astype(rpool.dtype).astype(F32)
+    else:
+        cl, rl = c_kv.astype(F32), k_rope.astype(F32)
+    CC = jnp.concatenate([cc, cl], axis=1)           # (b, S + s, lora)
+    CR = jnp.concatenate([cr, rl], axis=1)
+    kpos = jnp.broadcast_to(jnp.arange(S)[None, :], (b, S))
+    kpos_cat = jnp.concatenate([kpos, positions], axis=1)
+    pre_ok = jnp.concatenate([kpos < pos[:, None], jnp.ones((b, s), bool)],
+                             axis=1)
+    valid = (kpos_cat[:, None, :] <= positions[:, :, None]) \
+        & pre_ok[:, None, :]                         # (b, s, S+s)
+
+    w_uk = p["w_uk"].reshape(lora, hq, nope)
+    q_eff = jnp.einsum("bshn,lhn->bshl", q_nope.astype(F32),
+                       w_uk.astype(F32))             # (b, s, hq, lora)
+    logits = (jnp.einsum("bshl,bSl->bhsS", q_eff, CC)
+              + jnp.einsum("bshr,bSr->bhsS", q_rope.astype(F32), CR)) \
+        / np.sqrt(nope + rp)
+    logits = jnp.where(valid[:, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, -1)
+    ctx = jnp.einsum("bhsS,bSl->bshl", probs, CC)
+    w_uv = p["w_uv"].reshape(lora, hq, vd)
+    o = jnp.einsum("bshl,lhv->bshv", ctx, w_uv.astype(F32)).astype(x.dtype)
+    y = o.reshape(b, s, hq * vd) @ p["wo"]
+    y = constrain(y, "batch", None, "embed")
+    return x + y, new_pages
+
+
+def mla_paged_cache_decl(cfg, n_pages: int, page_size: int
+                         ) -> Dict[str, Decl]:
+    """One MLA layer's latent page pool: rows of the compressed cache,
+    paged over the sequence — (n_pages, page, lora) + the shared rope
+    head (n_pages, page, rope_dim)."""
+    return {
+        "c_kv": Decl((n_pages, page_size, cfg.kv_lora_rank),
+                     (None, None, "lora"), jnp.bfloat16, init="zeros"),
+        "k_rope": Decl((n_pages, page_size, cfg.qk_rope_dim),
+                       (None, None, None), jnp.bfloat16, init="zeros"),
+    }
 
 
 def mla_cache_decl(cfg, batch: int, max_seq: int) -> Dict[str, Decl]:

@@ -43,6 +43,15 @@ def _is_decl(x) -> bool:
     return isinstance(x, Decl)
 
 
+def stack_one(d: Decl, n: int) -> Decl:
+    """Prepend a length-n "stack" axis (scan-over-layers layout)."""
+    return Decl((n,) + d.shape, ("stack",) + d.axes, d.dtype, d.init, d.std)
+
+
+def stack_decls(tree, n: int):
+    return jax.tree.map(lambda d: stack_one(d, n), tree, is_leaf=_is_decl)
+
+
 def _path_str(path) -> str:
     return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                     for p in path)

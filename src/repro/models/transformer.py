@@ -25,7 +25,7 @@ from jax import lax
 from ..distributed.sharding import constrain
 from . import layers as L
 from . import ssm as S
-from .params import Decl
+from .params import Decl, stack_decls as P_stack_decls
 
 F32 = jnp.float32
 
@@ -34,13 +34,7 @@ def _tree_idx(tree, i):
     return jax.tree.map(lambda a: a[i], tree)
 
 
-def _stack_one(d: Decl, n: int) -> Decl:
-    return Decl((n,) + d.shape, ("stack",) + d.axes, d.dtype, d.init, d.std)
-
-
-def _stack_decls(tree, n: int):
-    return jax.tree.map(lambda d: _stack_one(d, n), tree,
-                        is_leaf=lambda x: isinstance(x, Decl))
+_stack_decls = P_stack_decls
 
 
 # --- mode-aware sub-blocks (add prefill cache emission) -----------------------------
@@ -49,12 +43,14 @@ def _stack_decls(tree, n: int):
 def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
                 cache_len: Optional[int] = None,
                 last_pos: Optional[jnp.ndarray] = None,
-                block_tab: Optional[jnp.ndarray] = None):
+                block_tab: Optional[jnp.ndarray] = None,
+                ring: bool = False):
     if mode in ("decode", "chunk"):
         if block_tab is not None:
-            return L.attention_apply_paged(cfg, p, x, window=window,
-                                           theta=theta, pages=cache,
-                                           block_tab=block_tab, pos=pos)
+            return L.attention_apply_paged(
+                cfg, p, x, window=window, theta=theta, pages=cache,
+                block_tab=block_tab, pos=pos, ring=ring,
+                last_idx=last_pos if mode == "chunk" else None)
         if mode == "chunk":
             raise NotImplementedError("chunk mode requires a paged cache")
         return L.attention_apply(cfg, p, x, window=window, theta=theta,
@@ -95,7 +91,14 @@ def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
     return y, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
 
 
-def _mla_block(cfg, p, x, *, cache, pos, mode, cache_len=None):
+def _mla_block(cfg, p, x, *, cache, pos, mode, cache_len=None,
+               block_tab=None, last_pos=None):
+    if block_tab is not None and mode in ("decode", "chunk"):
+        return L.mla_apply_paged(
+            cfg, p, x, pages=cache, block_tab=block_tab, pos=pos,
+            last_idx=last_pos if mode == "chunk" else None)
+    if mode == "chunk":
+        raise NotImplementedError("chunk mode requires a paged cache")
     if mode == "decode":
         return L.mla_apply(cfg, p, x, cache=cache, pos=pos)
     y, _ = L.mla_apply(cfg, p, x)
@@ -186,10 +189,30 @@ def gemma3_blocks(cfg):
 
     def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
               block_tab=None):
+        # Paged serving: ``block_tab`` is the {"local", "global"} table
+        # dict and ``cache`` the per-group page pools for this layer
+        # group.  Local (sliding-window) layers run the ring-of-pages
+        # layout — their page count stays window-bounded — while global
+        # layers use the flat growing layout.
+        paged = block_tab is not None and mode in ("decode", "chunk")
         local_caches, global_caches = [], []
         for i in range(per):
             pi = _tree_idx(p, i)
             window, theta = layer_kind(i)
+            if paged:
+                if i < n_local:
+                    ci = _tree_idx(cache["local"], i)
+                    bt, ring = block_tab["local"], True
+                else:
+                    ci = _tree_idx(cache["global"], i - n_local)
+                    bt, ring = block_tab["global"], False
+                x, nc = _attn_block(cfg, pi["attn"], x, window=window,
+                                    theta=theta, cache=ci, pos=pos,
+                                    mode=mode, last_pos=last_pos,
+                                    block_tab=bt, ring=ring)
+                x = L.mlp_apply(cfg, pi["mlp"], x)
+                (local_caches if i < n_local else global_caches).append(nc)
+                continue
             if cache is not None and mode == "decode":
                 ci = (_tree_idx(cache["local"], i) if i < n_local
                       else _tree_idx(cache["global"], i - n_local))
@@ -263,14 +286,16 @@ def deepseek_blocks(cfg):
     def apply_first(cfg, p, x, cache, pos, mode, cache_len=None,
                     last_pos=None, block_tab=None):
         x, nc = _mla_block(cfg, p["attn"], x, cache=cache, pos=pos,
-                           mode=mode, cache_len=cache_len)
+                           mode=mode, cache_len=cache_len,
+                           block_tab=block_tab, last_pos=last_pos)
         x = L.mlp_apply(cfg, p["mlp"], x)
         return x, nc
 
     def apply_rest(cfg, p, x, cache, pos, mode, cache_len=None,
                    last_pos=None, block_tab=None):
         x, nc = _mla_block(cfg, p["attn"], x, cache=cache, pos=pos,
-                           mode=mode, cache_len=cache_len)
+                           mode=mode, cache_len=cache_len,
+                           block_tab=block_tab, last_pos=last_pos)
         x = L.moe_apply(cfg, p["moe"], x)
         return x, nc
 
@@ -431,23 +456,30 @@ def cache_decls(cfg, batch: int, max_seq: int):
 
 
 def paged_supported(cfg) -> bool:
-    """Families whose KV caches can live in a shared page pool: uniform
-    {k, v} attention caches only.  Recurrent state (ssm/hybrid) is
-    O(1)/slot and stays slot-dense; gemma3's local/global split, MLA's
-    compressed cache, and int8 KV keep their dense layouts for now."""
-    return (cfg.family in ("dense", "moe") and not cfg.local_global_pattern
-            and not cfg.mla and cfg.kv_cache_dtype != "int8")
+    """Families with a registered ``CacheLayout`` — every attention
+    cache pages now (dense/moe GQA, gemma3 local/global, MLA latent,
+    int8 KV with scale pages).  Recurrent state (ssm/hybrid) is
+    O(1)/slot and stays slot-dense: there is nothing to page."""
+    from .cache_layouts import get_layout
+    return get_layout(cfg, cfg.kv_page_size or 16) is not None
 
 
-def paged_cache_decls(cfg, n_pages: int, page_size: int):
-    """Per-layer shared page pools, stacked for scan-over-layers:
-    (n_layers, n_pages, hkv, page_size, head_dim) per k/v leaf."""
-    if not paged_supported(cfg):
+def paged_cache_decls(cfg, n_pages, page_size: int):
+    """Per-group, per-layer shared page pools, stacked for
+    scan-over-layers — e.g. (n_layers, n_pages, hkv, page_size, head_dim)
+    per k/v leaf for the flat GQA layout.  ``n_pages``: int (same pool
+    size for every page group) or {group_name: int}.  The returned tree
+    is keyed by page group ("kv", or "local"/"global" for gemma3, or
+    "latent" for MLA) — see ``models.cache_layouts``."""
+    from .cache_layouts import get_layout
+    layout = get_layout(cfg, page_size)
+    if layout is None:
         raise NotImplementedError(
             f"paged KV unsupported for {cfg.name} ({cfg.family}); "
             "use dense slot caches")
-    return _stack_decls(
-        L.attention_paged_cache_decl(cfg, n_pages, page_size), cfg.n_layers)
+    if not isinstance(n_pages, dict):
+        n_pages = {g.name: int(n_pages) for g in layout.groups}
+    return layout.pool_decls(n_pages)
 
 
 def _remat(cfg, fn):
@@ -526,10 +558,21 @@ def forward(cfg, params, batch, mode: str = "train",
     x = _embed_input(cfg, params, batch)
     x = constrain(x, "batch", None, "embed")
 
+    rewrap_kv = False
     block_tab = None
     if cache is not None and isinstance(cache, dict) and "block_tab" in cache:
         block_tab = cache["block_tab"]
         cache = cache["pages"]
+        # Canonical paged form: pools and tables are dicts keyed by page
+        # group (see models.cache_layouts).  Single-"kv"-group layouts
+        # (dense/moe GQA, int8) unwrap to the bare tree/array the block
+        # builders consume; gemma3 keeps its {"local","global"} dicts and
+        # MLA its "latent" group, unwrapped in their branches below.
+        if isinstance(block_tab, dict) and set(block_tab) == {"kv"}:
+            block_tab = block_tab["kv"]
+        if isinstance(cache, dict) and set(cache) == {"kv"}:
+            cache = cache["kv"]
+            rewrap_kv = True
     if mode == "chunk" and block_tab is None:
         raise NotImplementedError("chunk mode requires a paged cache")
 
@@ -541,18 +584,27 @@ def forward(cfg, params, batch, mode: str = "train",
 
     if cfg.family == "moe" and cfg.mla:
         apply_first, apply_rest = fam[1]
-        cf = cache["first"] if (cache is not None and mode == "decode") \
-            else None
-        cr = cache["rest"] if (cache is not None and mode == "decode") \
-            else None
+        bt = None
+        if block_tab is not None:
+            bt = (block_tab["latent"] if isinstance(block_tab, dict)
+                  else block_tab)
+            pool = cache["latent"] if "latent" in cache else cache
+            cf, cr = pool["first"], pool["rest"]
+        else:
+            cf = cache["first"] if (cache is not None and mode == "decode") \
+                else None
+            cr = cache["rest"] if (cache is not None and mode == "decode") \
+                else None
         x, c_first = _scan_blocks(cfg, apply_first, blocks_p["first"], x,
                                   cf, pos, mode, cache_len,
-                                  last_pos=last_pos)
+                                  last_pos=last_pos, block_tab=bt)
         x, c_rest = _scan_blocks(cfg, apply_rest, blocks_p["rest"], x,
                                  cr, pos, mode, cache_len,
-                                 last_pos=last_pos)
+                                 last_pos=last_pos, block_tab=bt)
         new_cache = None if mode == "train" else {"first": c_first,
                                                   "rest": c_rest}
+        if bt is not None:
+            new_cache = {"latent": new_cache}
     elif cfg.family == "hybrid":
         apply_group = fam[1]
         G, k, tail = fam[3]
@@ -619,4 +671,6 @@ def forward(cfg, params, batch, mode: str = "train",
     logits = constrain(logits, "batch", None, "vocab")
     if mode == "train":
         return logits
+    if rewrap_kv:
+        new_cache = {"kv": new_cache}    # mirror the paged input structure
     return logits, new_cache

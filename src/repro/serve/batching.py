@@ -19,17 +19,40 @@ row.
 Paged KV cache (``cfg.kv_page_size > 0``)
 -----------------------------------------
 Dense slot caches reserve ``n_slots x max_seq`` KV rows no matter how
-short each request is.  In paged mode every attention layer instead owns
-a shared device page pool ``(n_pages, hkv, page, head_dim)``; a host-side
-``PageAllocator`` (free list) hands pages to requests at admission and
-takes them back in bulk at retire, and a per-slot *block table* maps
-logical page j -> physical page.  KV memory is therefore bounded by
-tokens actually in flight (``sum_i ceil((plen_i + max_new_i)/page)``
-pages), not by ``n_slots x max_seq`` — short requests stop reserving
-worst-case rows, so the same pool sustains strictly more concurrent
-sequences.  When the pool runs dry, admission simply *waits*: the
-request stays at the head of the FIFO (backpressure) until a retire
-frees pages — it is never errored.
+short each request is.  In paged mode the KV cache is owned by a
+pluggable ``CacheLayout`` (``models.cache_layouts``): per *page group*,
+every attention layer owns a shared device page pool, a host-side
+``PageAllocator`` (free list) hands pages to requests, and a per-slot
+*block table* maps logical page j -> physical page.  Every attention
+family pages now — flat bf16 {k, v} pools for dense/moe GQA, int8 pools
+with per-position scale pages, gemma3's local/global split (two page
+groups: window-bounded ring-of-pages for the local layers, flat growing
+pages for the global ones), and MLA's compressed latent pages.  The
+batcher only talks to the layout API, so there is no per-family
+branching here; recurrent families (ssm/hybrid) have O(1)/slot state —
+nothing to page — and keep the dense path.
+
+Lazy decode growth + slot preemption
+------------------------------------
+Admission reserves only *prompt* pages; each decode step grows a slot's
+block table on demand when its next write position crosses into an
+unallocated logical page (window-bounded ring groups stop growing at
+``ceil(window/page) + 1`` pages and reuse them in place).  When the pool
+runs dry mid-decode, the batcher *preempts* the lowest-priority slot
+(ties: most recently admitted): its pages are spilled host-side via the
+layout, its pages freed, and the request parked.  Once pages free up it
+resumes — possibly in a different slot — with the spilled pages restored
+bit-identically, so output tokens are exactly those of an uncontended
+run.  ``ContinuousBatcher(..., reserve_decode=True)`` (or
+``cfg.kv_reserve_decode``) restores the old reserve-at-admission policy
+for A/B benchmarking; the ``bursty_admission`` bench shows lazy growth
+admitting strictly more concurrent slots at equal pool size.
+
+When the pool cannot even cover a request's *prompt*, admission simply
+*waits*: the request stays at the head of the FIFO (backpressure) until
+a retire frees pages — it is never errored.  A request that could not
+fit in an empty pool is rejected (its stream closes) instead of
+livelocking.
 
 Chunked prefill
 ---------------
@@ -43,14 +66,6 @@ with decode steps inside ``run``: ``cfg.prefill_interleave`` decode
 steps run between consecutive chunks, so a 4k-token prompt admitted
 mid-stream costs active slots at most one chunk of latency per token
 instead of one full prefill — bounded inter-token p99.
-
-Dense fallback
---------------
-Recurrent families (ssm/hybrid) keep O(1)/slot state — there is nothing
-to page — and gemma3's local/global split, MLA's compressed cache, and
-int8 KV keep their dense layouts; ``registry.paged_supported`` gates the
-switch and the batcher silently falls back to the dense path (bucketed
-padded prefill, exact-length for recurrent state) for them.
 """
 
 from __future__ import annotations
@@ -58,7 +73,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +84,7 @@ from ..configs.base import ModelConfig
 from ..core.stream import Stream, StreamClosed
 from ..models import registry
 from ..models import params as PP
+from ..models.cache_layouts import get_layout
 from .serve_loop import make_chunk_prefill_step, make_paged_decode_step
 
 _MIN_BUCKET = 8            # smallest prefill bucket (pad-to-power-of-two)
@@ -190,6 +207,7 @@ class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,) int32
     max_new: int
+    priority: int = 0            # higher = preempted later
     out: Stream = dataclasses.field(
         default_factory=lambda: Stream(depth=4096, name="resp"))
 
@@ -199,27 +217,48 @@ class _Admission:
     """A request mid-chunked-prefill: owns a slot + pages, not yet decoding."""
     req: Request
     slot: int
-    pages: List[int]
     plen: int
     next_chunk: int
     n_chunks: int
 
 
+@dataclasses.dataclass
+class _Preempted:
+    """A preempted decode: its KV pages parked host-side, slot released.
+
+    ``pos``/``last_tok``/``remaining`` are the host mirrors of the slot's
+    device state at preemption time; ``data``/``counts`` hold the spilled
+    page payloads (per page group) and how many pages each group owned.
+    Resume restores the pages bit-identically into freshly allocated
+    physical pages, so post-resume tokens exactly match an uncontended
+    run.
+    """
+    req: Request
+    pos: int
+    last_tok: int
+    remaining: int
+    data: Dict[str, Any]
+    counts: Dict[str, int]
+    seq: int                     # admission order (preemption tie-break)
+
+
 class ContinuousBatcher:
     """Fixed-slot continuous batcher with device-resident slot state.
 
-    The host keeps only the slot -> ``Request`` mapping, the page
-    allocator, and the block tables' mirror; everything the decode loop
-    reads or writes stays on device across steps.  ``cfg.kv_page_size``
-    selects paged KV + chunked prefill (see module docstring); families
-    without pageable caches fall back to the dense path automatically.
+    The host keeps only the slot -> ``Request`` mapping, the per-group
+    page allocators, and the block tables' mirror; everything the decode
+    loop reads or writes stays on device across steps.
+    ``cfg.kv_page_size`` selects paged KV + chunked prefill (see module
+    docstring); recurrent families (nothing to page) fall back to the
+    dense path automatically.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
-                 max_seq: int, n_pages: Optional[int] = None,
+                 max_seq: int, n_pages=None,
                  page_size: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefill_interleave: Optional[int] = None):
+                 prefill_interleave: Optional[int] = None,
+                 reserve_decode: Optional[bool] = None):
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError("batcher demo covers LM families")
         self.cfg, self.params = cfg, params
@@ -230,6 +269,10 @@ class ContinuousBatcher:
         self.retired = 0
         self.prefill_compiles = 0
         self.prefill_chunks = 0
+        self.preemptions = 0
+        self.resumes = 0
+        self.peak_pages = 0
+        self.preempted_rids: List[int] = []    # observability (tests/benches)
 
         # host mirror: which Request occupies each slot (None = free).
         self._slot_req: List[Optional[Request]] = [None] * n_slots
@@ -245,30 +288,61 @@ class ContinuousBatcher:
         self.active = jnp.zeros((n_slots,), bool)
 
         psz = page_size or cfg.kv_page_size
-        self.paged = bool(psz) and registry.paged_supported(cfg)
+        self.layout = get_layout(cfg, int(psz)) if psz else None
+        self.paged = bool(psz) and self.layout is not None
         if self.paged:
             self.page_size = int(psz)
-            self.n_blocks = _ceil_div(max_seq, self.page_size)
+            self.reserve_decode = bool(
+                cfg.kv_reserve_decode if reserve_decode is None
+                else reserve_decode)
+            self.n_blocks = {g.name: self.layout.n_blocks(g.name, max_seq)
+                             for g in self.layout.groups}
             # default pool = dense-equivalent capacity; benchmarks pass a
-            # smaller pool to show the memory-proportionality win.
-            self.n_pages = int(n_pages or n_slots * self.n_blocks)
+            # smaller pool to show the memory-proportionality win.  An
+            # int applies to every growing group; window-bounded ring
+            # groups never need more than n_slots * n_blocks pages.
+            dense_eq = {name: n_slots * nb
+                        for name, nb in self.n_blocks.items()}
+            if n_pages is None:
+                self.n_pages = dense_eq
+            elif isinstance(n_pages, dict):
+                self.n_pages = {**dense_eq, **{k: int(v) for k, v
+                                               in n_pages.items()}}
+            else:
+                self.n_pages = {
+                    g.name: (min(int(n_pages), dense_eq[g.name])
+                             if g.ring else int(n_pages))
+                    for g in self.layout.groups}
             self.chunk = int(prefill_chunk or cfg.prefill_chunk
                              or max(self.page_size, _MIN_CHUNK))
             self.prefill_interleave = int(
                 cfg.prefill_interleave if prefill_interleave is None
                 else prefill_interleave)
-            self._alloc = PageAllocator(self.n_pages)
-            self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+            self._alloc = {name: PageAllocator(n)
+                           for name, n in self.n_pages.items()}
+            self._slot_pages: Dict[str, List[List[int]]] = {
+                name: [[] for _ in range(n_slots)] for name in self.n_pages}
             self._admitting: Deque[_Admission] = collections.deque()
+            self._preempted: List[_Preempted] = []
             self.pools = PP.init_params(
-                registry.paged_cache_decls(cfg, self.n_pages, self.page_size))
-            # invalid page id == n_pages: reads clamp (and are masked),
-            # writes scatter-drop.
-            self.block_tab = jnp.full((n_slots, self.n_blocks), self.n_pages,
-                                      i32)
-            self._step = make_paged_decode_step(cfg, max_seq)
+                registry.paged_cache_decls(cfg, self.n_pages,
+                                           self.page_size))
+            # invalid page id == n_pages[group]: reads clamp (and are
+            # masked), writes scatter-drop.
+            self.block_tab = {
+                name: jnp.full((n_slots, self.n_blocks[name]),
+                               self.n_pages[name], i32)
+                for name in self.n_pages}
+            # host mirrors of per-slot decode state (drive lazy growth
+            # and preemption without device readbacks).
+            self._host_pos = [0] * n_slots
+            self._host_last_tok = [0] * n_slots
+            self._host_remaining = [0] * n_slots
+            self._slot_seq = [0] * n_slots
+            self._admit_seq = 0
+            self._step = make_paged_decode_step(cfg, max_seq, self.page_size)
             self._chunk_fn = make_chunk_prefill_step(cfg, self.chunk,
-                                                     max_seq)
+                                                     max_seq, self.page_size)
         else:
             cache_d = registry.cache_decls(cfg, 1, max_seq)
             one = PP.init_params(cache_d)  # zeros (init=zeros decls)
@@ -291,25 +365,58 @@ class ContinuousBatcher:
         r.out.close()
         self.retired += 1
 
+    def total_used_pages(self) -> int:
+        return sum(a.used_pages for a in self._alloc.values())
+
+    def total_free_pages(self) -> int:
+        return sum(a.free_pages for a in self._alloc.values())
+
     # -- paged admission (chunked prefill) --------------------------------------------
 
-    def _pages_needed(self, r: Request) -> int:
-        return _ceil_div(min(len(r.prompt) + r.max_new, self.max_seq),
-                         self.page_size)
+    def _full_pages_needed(self, r: Request, group: str) -> int:
+        """Worst-case pages the request can ever hold in this group."""
+        total = min(len(r.prompt) + r.max_new, self.max_seq)
+        return self.layout.blocks_for(group, total, self.max_seq)
+
+    def _admit_pages_needed(self, r: Request, group: str) -> int:
+        """Pages reserved at admission: prompt-only under lazy growth,
+        the full worst case under ``reserve_decode``."""
+        if self.reserve_decode:
+            return self._full_pages_needed(r, group)
+        return self.layout.blocks_for(group, len(r.prompt), self.max_seq)
+
+    def _set_table_row(self, group: str, slot: int,
+                       pages: Sequence[int]) -> None:
+        row = np.full((self.n_blocks[group],), self.n_pages[group], np.int32)
+        row[:len(pages)] = pages
+        self.block_tab[group] = \
+            self.block_tab[group].at[slot].set(jnp.asarray(row))
+
+    def _note_peak(self) -> None:
+        self.peak_pages = max(self.peak_pages, self.total_used_pages())
 
     def _try_admit_paged(self, r: Request, slot: int) -> bool:
-        """Reserve pages + a slot and start chunked prefill.  Returns
-        False (leaving ``r`` to the caller) when the pool is dry."""
-        pages = self._alloc.alloc(self._pages_needed(r))
-        if pages is None:
-            return False
-        row = np.full((self.n_blocks,), self.n_pages, np.int32)
-        row[:len(pages)] = pages
-        self.block_tab = self.block_tab.at[slot].set(jnp.asarray(row))
-        self._slot_pages[slot] = pages
+        """Reserve admission pages + a slot and start chunked prefill.
+        Returns False (leaving ``r`` to the caller) when any group's
+        pool is dry — all-or-nothing across page groups."""
+        grabbed: Dict[str, List[int]] = {}
+        for g in self.layout.groups:
+            pages = self._alloc[g.name].alloc(
+                self._admit_pages_needed(r, g.name))
+            if pages is None:
+                for name, pgs in grabbed.items():
+                    self._alloc[name].free(pgs)
+                return False
+            grabbed[g.name] = pages
+        for name, pages in grabbed.items():
+            self._set_table_row(name, slot, pages)
+            self._slot_pages[name][slot] = list(pages)
+        self._note_peak()
         plen = len(r.prompt)
+        self._slot_seq[slot] = self._admit_seq
+        self._admit_seq += 1
         self._admitting.append(_Admission(
-            req=r, slot=slot, pages=pages, plen=plen, next_chunk=0,
+            req=r, slot=slot, plen=plen, next_chunk=0,
             n_chunks=max(1, _ceil_div(plen, self.chunk))))
         return True
 
@@ -337,17 +444,142 @@ class ContinuousBatcher:
             a.req.out.Push(int(tok0))
             if a.req.max_new > 1 and a.plen < self.max_seq - 1:
                 self._slot_req[a.slot] = a.req
+                self._host_pos[a.slot] = a.plen
+                self._host_last_tok[a.slot] = int(tok0)
+                self._host_remaining[a.slot] = a.req.max_new - 1
             else:                              # retired at admission
                 a.req.out.close()
                 self.retired += 1
                 self._release_slot(a.slot)
 
     def _release_slot(self, slot: int) -> None:
-        """Bulk-free the slot's pages and invalidate its block table row
-        so later (masked) decode writes can never touch reused pages."""
-        self._alloc.free(self._slot_pages[slot])
-        self._slot_pages[slot] = []
-        self.block_tab = self.block_tab.at[slot].set(self.n_pages)
+        """Bulk-free the slot's pages (every group) and invalidate its
+        block table rows so later (masked) decode writes can never touch
+        reused pages."""
+        for name in self._slot_pages:
+            if self._slot_pages[name][slot]:
+                self._alloc[name].free(self._slot_pages[name][slot])
+                self._slot_pages[name][slot] = []
+            self.block_tab[name] = self.block_tab[name].at[slot].set(
+                self.n_pages[name])
+
+    # -- lazy decode growth + preemption ------------------------------------------------
+
+    def _pick_victim(self) -> Optional[int]:
+        """Lowest-priority decoding slot (ties: most recently admitted)."""
+        cands = [i for i, r in enumerate(self._slot_req) if r is not None]
+        if not cands:
+            return None
+        return min(cands, key=lambda i: (self._slot_req[i].priority,
+                                         -self._slot_seq[i]))
+
+    def _preempt(self, slot: int) -> None:
+        """Spill the slot's pages host-side, free them, park the request."""
+        r = self._slot_req[slot]
+        data: Dict[str, Any] = {}
+        counts: Dict[str, int] = {}
+        for g in self.layout.groups:
+            pages = self._slot_pages[g.name][slot]
+            counts[g.name] = len(pages)
+            data[g.name] = (self.layout.spill(self.pools, g.name, pages)
+                            if pages else None)
+        self._preempted.append(_Preempted(
+            req=r, pos=self._host_pos[slot],
+            last_tok=self._host_last_tok[slot],
+            remaining=self._host_remaining[slot],
+            data=data, counts=counts, seq=self._slot_seq[slot]))
+        self.active = self.active.at[slot].set(False)
+        self._slot_req[slot] = None
+        self._release_slot(slot)
+        self.preemptions += 1
+        self.preempted_rids.append(r.rid)
+
+    def _grow_slot(self, slot: int) -> bool:
+        """Ensure every group holds pages for the slot's next decode
+        write; preempts other slots when the pool is dry (self-preempts
+        as a last resort).  Returns False iff the slot was preempted."""
+        nxt = self._host_pos[slot]             # position decode writes next
+        for g in self.layout.groups:
+            need = self.layout.blocks_for(g.name, nxt + 1, self.max_seq)
+            pages = self._slot_pages[g.name][slot]
+            while len(pages) < need:
+                got = self._alloc[g.name].alloc(1)
+                if got is None:
+                    # the victim may be the growing slot itself: a
+                    # low-priority grower parks rather than evicting a
+                    # higher-priority decode.
+                    victim = self._pick_victim()
+                    if victim is None or victim == slot:
+                        self._preempt(slot)
+                        return False
+                    self._preempt(victim)
+                    continue
+                pages.append(got[0])
+                self.block_tab[g.name] = self.block_tab[g.name].at[
+                    slot, len(pages) - 1].set(got[0])
+        self._note_peak()
+        return True
+
+    def _try_resume(self) -> int:
+        """Restore preempted requests into free slots, highest priority
+        (then oldest) first; all page groups alloc-or-nothing."""
+        resumed = 0
+        busy = {a.slot for a in self._admitting}
+        while self._preempted:
+            free = [i for i, r in enumerate(self._slot_req)
+                    if r is None and i not in busy]
+            if not free:
+                break
+            order = sorted(
+                range(len(self._preempted)),
+                key=lambda i: (-self._preempted[i].req.priority,
+                               self._preempted[i].seq))
+            idx = order[0]
+            rec = self._preempted[idx]
+            grabbed: Dict[str, List[int]] = {}
+            ok = True
+            for g in self.layout.groups:
+                # headroom: also cover the next decode write, so a
+                # resumed slot always emits at least one token before it
+                # can be preempted again — without this, resuming into a
+                # still-dry pool thrashes spill/restore every step.
+                need = max(rec.counts[g.name],
+                           self.layout.blocks_for(g.name, rec.pos + 1,
+                                                  self.max_seq))
+                pages = self._alloc[g.name].alloc(need)
+                if pages is None:
+                    ok = False
+                    break
+                grabbed[g.name] = pages
+            if not ok:
+                for name, pgs in grabbed.items():
+                    self._alloc[name].free(pgs)
+                break
+            slot = free[0]
+            self._preempted.pop(idx)
+            for name, pages in grabbed.items():
+                n = rec.counts[name]
+                if n:
+                    self.pools = self.layout.restore(
+                        self.pools, name, rec.data[name], pages[:n])
+                self._set_table_row(name, slot, pages)
+                self._slot_pages[name][slot] = list(pages)
+            self._note_peak()
+            i32 = jnp.int32
+            self.last_tok = self.last_tok.at[slot].set(
+                jnp.asarray(rec.last_tok, i32))
+            self.pos = self.pos.at[slot].set(jnp.asarray(rec.pos, i32))
+            self.remaining = self.remaining.at[slot].set(
+                jnp.asarray(rec.remaining, i32))
+            self.active = self.active.at[slot].set(True)
+            self._slot_req[slot] = rec.req
+            self._slot_seq[slot] = rec.seq
+            self._host_pos[slot] = rec.pos
+            self._host_last_tok[slot] = rec.last_tok
+            self._host_remaining[slot] = rec.remaining
+            self.resumes += 1
+            resumed += 1
+        return resumed
 
     # -- dense bucketed admission -----------------------------------------------------
 
@@ -422,25 +654,37 @@ class ContinuousBatcher:
     # -- scheduling ---------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        """Validate + enqueue: oversized prompts are rejected HERE, in
-        the producer's thread, so one bad request can't kill the batcher
-        PE mid-flight with other requests in its slots."""
-        if len(req.prompt) >= self.max_seq:
+        """Validate + enqueue.  Degenerate requests are rejected HERE, in
+        the producer's thread, with a clear error — instead of burning a
+        slot and pages on an admission whose slot is immediately
+        non-alive (or one bad request killing the batcher PE mid-flight
+        with other requests in its slots):
+
+        * ``prompt >= max_seq - 1``: prefill would leave no room to
+          decode even one token past the first.
+        * ``max_new <= 1``: the request retires at admission (its single
+          token comes from the prefill itself) — a full prefill for a
+          dead slot.
+        """
+        if len(req.prompt) >= self.max_seq - 1:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} >= "
-                f"max_seq {self.max_seq}")
+                f"max_seq - 1 ({self.max_seq - 1}); no decode budget left")
+        if req.max_new <= 1:
+            raise ValueError(
+                f"request {req.rid}: max_new={req.max_new} <= 1 would "
+                f"retire at admission; request at least 2 tokens")
         self.requests.Push(req)
 
     def admit(self) -> int:
-        """Fill free slots from the request stream.
+        """Fill free slots: resume preempted requests first, then pop the
+        request stream.
 
-        Paged: each placed request reserves pages (or waits — admission
-        backpressure) and enters chunked prefill.  Dense: one batched
-        padded prefill per bucket."""
-        busy = ({a.slot for a in self._admitting} if self.paged else set())
-        free = [i for i, r in enumerate(self._slot_req)
-                if r is None and i not in busy]
+        Paged: each placed request reserves its admission pages (or
+        waits — admission backpressure) and enters chunked prefill.
+        Dense: one batched padded prefill per bucket."""
         if not self.paged:
+            free = [i for i, r in enumerate(self._slot_req) if r is None]
             pairs: List[Tuple[int, Request]] = []
             for slot in free:
                 r = self._next_request()
@@ -450,15 +694,19 @@ class ContinuousBatcher:
             if pairs:
                 self._admit_batch(pairs)
             return len(pairs)
-        admitted = 0
+        admitted = self._try_resume()
+        busy = {a.slot for a in self._admitting}
+        free = [i for i, r in enumerate(self._slot_req)
+                if r is None and i not in busy]
         for slot in free:
             r = self._next_request()
             if r is None:
                 break
-            if len(r.prompt) >= self.max_seq:
-                self._reject(r)
+            if len(r.prompt) >= self.max_seq or r.max_new < 1:
+                self._reject(r)    # bypassed submit() validation
                 continue
-            if self._pages_needed(r) > self._alloc.n_pages:
+            if any(self._full_pages_needed(r, g.name) > self.n_pages[g.name]
+                   for g in self.layout.groups):
                 self._reject(r)    # can never fit, even in an empty pool
                 continue
             if not self._try_admit_paged(r, slot):
@@ -470,7 +718,17 @@ class ContinuousBatcher:
         return admitted
 
     def step(self) -> int:
-        """One batched decode step; returns number of sequences retired."""
+        """One batched decode step; returns number of sequences retired.
+
+        Paged + lazy growth: before the jitted step, every decoding
+        slot's block tables are grown to cover its next write position —
+        allocating pages on demand and preempting the lowest-priority
+        slot if the pool is dry.
+        """
+        if self.paged and not self.reserve_decode:
+            for slot in range(self.n_slots):
+                if self._slot_req[slot] is not None:
+                    self._grow_slot(slot)
         if all(r is None for r in self._slot_req):
             return 0
         if self.paged:
@@ -490,6 +748,10 @@ class ContinuousBatcher:
             if r is None:
                 continue
             r.out.Push(int(toks[i]))
+            if self.paged:
+                self._host_last_tok[i] = int(toks[i])
+                self._host_pos[i] += 1
+                self._host_remaining[i] -= 1
             if finished[i]:
                 r.out.close()
                 self._slot_req[i] = None
@@ -514,7 +776,9 @@ class ContinuousBatcher:
         polling instead of deadlocking, and a closed stream ends the
         loop cleanly.  An idle-path arrival is re-queued through
         ``admit()`` so the allocator — not a hardcoded slot — picks its
-        placement."""
+        placement.  Preempted requests count as pending work: the loop
+        never blocks (or exits on a closed stream) while any wait to
+        resume."""
         decodes_since_chunk = 0
         while self.retired < total_requests:
             self.admit()
@@ -530,7 +794,7 @@ class ContinuousBatcher:
             if busy:
                 self.step()
                 continue
-            if self._pending:
+            if self._pending or (self.paged and self._preempted):
                 continue           # waiting on pages with idle slots:
                                    # admit() above will retry/reject.
             try:

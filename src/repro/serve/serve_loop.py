@@ -140,16 +140,26 @@ def make_sampling_serve_steps(cfg: ModelConfig, batch: int, max_seq: int,
 #   installs the slot's decode state (first sampled token, position,
 #   budget, active flag) on device, gated by the traced ``is_final`` flag
 #   so both chunk kinds share one compiled program.
+#
+# Pools and block tables are dicts keyed by the layout's page groups
+# (``models.cache_layouts``): {"kv"} for flat GQA/int8 layouts,
+# {"local", "global"} for gemma3, {"latent"} for MLA.
 
 
 @functools.lru_cache(maxsize=32)
-def make_paged_decode_step(cfg: ModelConfig, max_seq: int):
+def make_paged_decode_step(cfg: ModelConfig, max_seq: int, page_size: int):
     """Jitted batched decode over paged KV: advances all slots at once."""
+    from ..models.cache_layouts import get_layout
+    layout = get_layout(cfg, page_size)
     i32 = jnp.int32
 
     def step_fn(params, pools, block_tab, last_tok, pos, remaining, active):
-        n_pages = jax.tree.leaves(pools)[0].shape[1]
-        bt = jnp.where(active[:, None], block_tab, n_pages)
+        bt = {}
+        for g in layout.groups:
+            n_pages = jax.tree.leaves(pools[g.name])[0].shape[
+                layout.page_axis(g.name)]
+            bt[g.name] = jnp.where(active[:, None], block_tab[g.name],
+                                   n_pages)
         cache = {"pages": pools, "block_tab": bt}
         logits, new_pools = registry.forward(
             cfg, params, {"tokens": last_tok[:, None]}, mode="decode",
@@ -167,15 +177,19 @@ def make_paged_decode_step(cfg: ModelConfig, max_seq: int):
 
 
 @functools.lru_cache(maxsize=32)
-def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int):
+def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int,
+                            page_size: int):
     """Jitted single-request prefill chunk against the paged cache."""
+    from ..models.cache_layouts import get_layout
+    layout = get_layout(cfg, page_size)
     i32 = jnp.int32
 
     def chunk_fn(params, pools, block_tab, last_tok, pos, remaining, active,
                  tokens, pos0, last_in_chunk, slot_idx, is_final, plen,
                  max_new):
-        n_slots = block_tab.shape[0]
-        bt_row = jax.lax.dynamic_index_in_dim(block_tab, slot_idx, 0)
+        n_slots = jax.tree.leaves(block_tab)[0].shape[0]
+        bt_row = {g.name: jax.lax.dynamic_index_in_dim(
+            block_tab[g.name], slot_idx, 0) for g in layout.groups}
         cache = {"pages": pools, "block_tab": bt_row}
         logits, new_pools = registry.forward(
             cfg, params, {"tokens": tokens}, mode="chunk", cache=cache,

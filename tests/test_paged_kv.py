@@ -1,8 +1,11 @@
 """Paged KV cache + chunked prefill: allocator invariants, admission
 backpressure, block-table reuse correctness, paged-vs-dense token
-equivalence across families, stall-free chunked admission, the
-mask-aware ring prefill for windowed buckets, and the block-table-aware
-decode flash kernel.
+equivalence across every CacheLayout family (flat GQA, int8 scale
+pages, gemma3 local/global ring-of-pages, MLA latent pages), stall-free
+chunked admission, the mask-aware ring prefill for windowed buckets,
+the block-table-aware decode flash kernel, and the lazy-decode-growth /
+slot-preemption invariants (token-identical resume, allocator
+consistency across spill/restore, dense-equivalent page budget).
 """
 
 import dataclasses
@@ -97,7 +100,7 @@ def test_paged_matches_dense_token_for_token(model):
     got, bat = _run_batcher(paged_cfg, params, prompts, max_news, n_pages=6)
     assert bat.paged
     assert got == gold
-    assert bat._alloc.used_pages == 0            # all pages returned
+    assert bat.total_used_pages() == 0           # all pages returned
 
 
 @pytest.mark.parametrize("arch,window", [("minitron-4b", None),
@@ -118,6 +121,54 @@ def test_paged_matches_dense_across_families(arch, window):
                             params, prompts, max_news, max_seq=48)
     assert bat.paged
     assert got == gold
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("gemma3-12b", {}),                              # local/global tree
+    ("deepseek-v2-lite-16b", {}),                    # MLA latent pages
+    ("minitron-4b", {"kv_cache_dtype": "int8"}),     # int8 + scale pages
+])
+def test_structured_layouts_paged_match_dense(arch, kw):
+    """Acceptance: every CacheLayout family — gemma3's window-aware
+    local/global split, MLA's compressed latent cache, int8 KV with
+    per-position scale pages — is paged-supported and produces the dense
+    batcher's tokens exactly.  Prompts fit one prefill chunk so both
+    paths see identical rounding."""
+    cfg = dataclasses.replace(smoke_variant(configs.get(arch)), **kw)
+    params = registry.init(cfg, 0)
+    plens = [5, 12, 21]
+    max_news = [4, 3, 4]
+    prompts = _prompts(cfg, plens)
+    gold, _ = _run_batcher(cfg, params, prompts, max_news, max_seq=48)
+    paged_cfg = dataclasses.replace(cfg, kv_page_size=8)
+    assert registry.paged_supported(paged_cfg)
+    got, bat = _run_batcher(paged_cfg, params, prompts, max_news,
+                            max_seq=48, prefill_chunk=32)
+    assert bat.paged
+    assert got == gold
+    assert bat.total_used_pages() == 0
+
+
+def test_gemma3_local_pages_window_bounded():
+    """The gemma3 local page group is a ring: its table width (and so
+    every slot's local page count) is O(window/page) regardless of
+    max_seq, while the global group grows with the sequence."""
+    cfg = dataclasses.replace(smoke_variant(configs.get("gemma3-12b")),
+                              kv_page_size=8)
+    params = registry.init(cfg, 0)
+    bat = ContinuousBatcher(cfg, params, n_slots=2, max_seq=64)
+    w, page = cfg.sliding_window, 8
+    assert bat.n_blocks["local"] == w // page + 1     # ring, not 64/8
+    assert bat.n_blocks["global"] == 64 // page
+    prompts = _prompts(cfg, [40])
+    gold = list(np.asarray(greedy_generate(
+        cfg, params, {"tokens": jnp.asarray(prompts[0])[None]}, steps=6,
+        max_seq=64)[0]))
+    got, bat = _run_batcher(cfg, params, prompts, [6], max_seq=64,
+                            prefill_chunk=64)
+    assert got == [gold]
+    # a 40-token prompt + decode held at most ring-width local pages.
+    assert bat.peak_pages <= (w // page + 1) + -(-64 // page)
 
 
 def test_paged_falls_back_to_dense_for_recurrent_families():
@@ -149,7 +200,7 @@ def test_out_of_pages_admission_backpressure(model):
                             n_pages=3)
     assert got == gold
     assert bat.retired == 3
-    assert bat._alloc.used_pages == 0
+    assert bat.total_used_pages() == 0
 
 
 def test_unservable_request_rejected_not_deadlocked(model):
@@ -177,9 +228,136 @@ def test_block_table_correct_after_retire_then_reuse(model):
     got, bat = _run_batcher(paged_cfg, params, prompts, [4] * 5,
                             n_slots=1, n_pages=4)
     assert got == golds
-    assert bat._alloc.used_pages == 0
+    assert bat.total_used_pages() == 0
     # retired slots' block-table rows are invalidated on device.
-    assert int(jnp.min(bat.block_tab)) == bat.n_pages
+    for name, tab in bat.block_tab.items():
+        assert int(jnp.min(tab)) == bat.n_pages[name]
+
+
+# --- lazy decode growth + slot preemption ---------------------------------------------
+
+
+def test_lazy_growth_preempt_resume_token_identical(model):
+    """The preemption acceptance triple:
+
+    * a pool too small for both decodes forces preemption mid-decode,
+      and every request still produces EXACTLY its uncontended tokens
+      (pages are spilled/restored bit-identically);
+    * the allocator free list is consistent across spill/restore — all
+      pages return, no leaks, tables invalidated;
+    * the batcher actually preempted and resumed (the path ran).
+    """
+    cfg, params = model
+    paged_cfg = dataclasses.replace(cfg, kv_page_size=4)
+    plens = [8, 8]
+    max_news = [8, 8]
+    prompts = _prompts(cfg, plens)
+    gold, _ = _run_batcher(cfg, params, prompts, max_news)
+    # full need = ceil(16/4) = 4 pages/request; prompts need 2 each.
+    # pool of 5: both admit lazily (4 used), growth runs dry -> preempt.
+    got, bat = _run_batcher(paged_cfg, params, prompts, max_news, n_pages=5)
+    assert bat.paged
+    assert bat.preemptions > 0 and bat.resumes > 0
+    assert got == gold
+    assert bat.total_used_pages() == 0
+    for name, alloc in bat._alloc.items():
+        assert alloc.free_pages == bat.n_pages[name]
+    for name, tab in bat.block_tab.items():
+        assert int(jnp.min(tab)) == bat.n_pages[name]
+
+
+def test_priority_picks_preemption_victim(model):
+    """The lowest-priority slot is preempted first: under page pressure
+    the high-priority request keeps decoding while the low-priority one
+    is parked — and both still finish with uncontended tokens."""
+    cfg, params = model
+    paged_cfg = dataclasses.replace(cfg, kv_page_size=4)
+    prompts = _prompts(cfg, [8, 8])
+    golds = [list(np.asarray(greedy_generate(
+        cfg, params, {"tokens": jnp.asarray(p)[None]}, steps=8,
+        max_seq=32)[0])) for p in prompts]
+    bat = ContinuousBatcher(paged_cfg, params, n_slots=2, max_seq=32,
+                            n_pages=5)
+    lo = Request(rid=0, prompt=prompts[0], max_new=8, priority=0)
+    hi = Request(rid=1, prompt=prompts[1], max_new=8, priority=1)
+    import threading
+    prod = threading.Thread(target=lambda: [bat.submit(lo), bat.submit(hi)])
+    prod.start()
+    bat.run(2)
+    prod.join()
+    assert [drain(lo), drain(hi)] == golds
+    assert bat.preemptions > 0
+    # every preemption hit the low-priority request.
+    assert set(bat.preempted_rids) == {0}
+
+
+def test_lazy_growth_stays_within_dense_budget(model):
+    """Lazy growth must never allocate beyond the dense-equivalent page
+    budget (n_slots * blocks(max_seq) per group): pages are proportional
+    to tokens actually materialized, so the peak is strictly below the
+    reserve-everything bound for short requests."""
+    cfg, params = model
+    paged_cfg = dataclasses.replace(cfg, kv_page_size=8)
+    plens = [8, 5, 11, 3, 9, 6]
+    max_news = [4, 7, 2, 5, 3, 6]
+    prompts = _prompts(cfg, plens)
+    got, bat = _run_batcher(paged_cfg, params, prompts, max_news,
+                            n_slots=2, max_seq=32)
+    dense_budget = sum(bat.n_slots * nb for nb in bat.n_blocks.values())
+    assert 0 < bat.peak_pages <= dense_budget
+    # short requests never materialize max_seq tokens: strictly below.
+    assert bat.peak_pages < dense_budget
+    assert bat.total_used_pages() == 0
+
+
+def test_lazy_admits_more_than_reserve_at_equal_pool(model):
+    """The bursty-admission claim: at equal pool size, reserving only
+    prompt pages admits strictly more concurrent slots than reserving
+    plen + max_new up front."""
+    cfg, params = model
+
+    def fill(reserve):
+        paged_cfg = dataclasses.replace(cfg, kv_page_size=8,
+                                        kv_reserve_decode=reserve)
+        bat = ContinuousBatcher(paged_cfg, params, n_slots=8, max_seq=64,
+                                n_pages=8)
+        reqs = [Request(rid=i, prompt=_prompts(cfg, [4])[0], max_new=28)
+                for i in range(8)]
+        for r in reqs:
+            bat.submit(r)
+        progress = True
+        while progress:
+            progress = bat.admit() > 0
+            while bat._admitting:
+                bat._prefill_step()
+                progress = True
+        inflight = sum(r is not None for r in bat._slot_req)
+        bat.run(len(reqs))
+        for r in reqs:
+            drain(r)
+        return inflight, bat
+
+    lazy_inflight, lazy_bat = fill(reserve=False)
+    reserve_inflight, _ = fill(reserve=True)
+    # 8 pages, 1-page prompts, 4-page worst case: 8 lazy vs 2 reserved.
+    assert lazy_inflight > reserve_inflight
+    assert lazy_bat.total_used_pages() == 0
+
+
+def test_submit_rejects_degenerate_requests(model):
+    """Admission edge case: requests that would admit into an
+    immediately non-alive slot are rejected at submit() with a clear
+    error instead of burning a slot and pages."""
+    cfg, params = model
+    bat = ContinuousBatcher(cfg, params, n_slots=2, max_seq=32)
+    with pytest.raises(ValueError, match="max_new"):
+        bat.submit(Request(rid=0, prompt=_prompts(cfg, [4])[0], max_new=1))
+    with pytest.raises(ValueError, match="max_new"):
+        bat.submit(Request(rid=1, prompt=_prompts(cfg, [4])[0], max_new=0))
+    with pytest.raises(ValueError, match="prompt length"):
+        bat.submit(Request(rid=2, prompt=_prompts(cfg, [31])[0], max_new=4))
+    with pytest.raises(ValueError, match="prompt length"):
+        bat.submit(Request(rid=3, prompt=_prompts(cfg, [40])[0], max_new=4))
 
 
 # --- chunked prefill ------------------------------------------------------------------
@@ -324,6 +502,58 @@ def test_paged_flash_kernel_matches_ref(window):
     pos = jnp.asarray([35, 15, 63], jnp.int32)
     out = flash_attention_decode_paged(q, kp, vp, bt, pos, window=window)
     gold = ref.paged_attention_ref(q, kp, vp, bt, pos, window=window)
+    assert float(jnp.abs(out - gold).max()) <= 1e-3
+
+
+@pytest.mark.parametrize("window", [16, 24])
+def test_paged_flash_kernel_ring_page_base_matches_ref(window):
+    """Ring-of-pages window groups: the kernel's per-entry logical base
+    (scalar-prefetched ``page_base``) must reproduce the reference's
+    reconstructed-position masking, including negative (never-written)
+    slots."""
+    rng = np.random.default_rng(7)
+    b, hq, hkv, d = 2, 4, 2, 32
+    n_pages, page, nbl = 8, 8, 4
+    kp = jnp.asarray(rng.standard_normal((n_pages, hkv, page, d)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, hkv, page, d)),
+                     jnp.float32)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+    bt = jnp.asarray([[3, 1, 7, 0], [2, 5, 99, 99]], jnp.int32)
+    pos = jnp.asarray([43, 9], jnp.int32)
+    # entry j holds logical page l = cur - ((cur - j) % nbl).
+    cur = pos[:, None] // page
+    jj = jnp.arange(nbl)[None, :]
+    base = ((cur - ((cur - jj) % nbl)) * page).astype(jnp.int32)
+    out = flash_attention_decode_paged(q, kp, vp, bt, pos, window=window,
+                                       page_base=base)
+    gold = ref.paged_attention_ref(q, kp, vp, bt, pos, window=window,
+                                   page_base=base)
+    assert float(jnp.abs(out - gold).max()) <= 1e-3
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_paged_flash_kernel_int8_scales_match_ref(window):
+    """int8 pools with per-position scale pages: the kernel dequantizes
+    in VMEM and must match the dense dequantize-then-attend oracle."""
+    rng = np.random.default_rng(9)
+    b, hq, hkv, d = 2, 4, 2, 32
+    n_pages, page, n_blocks = 6, 16, 3
+    kp = jnp.asarray(rng.integers(-127, 128, (n_pages, hkv, page, d)),
+                     jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (n_pages, hkv, page, d)),
+                     jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.02, (n_pages, hkv, page, 1)),
+                     jnp.bfloat16)
+    vs = jnp.asarray(rng.uniform(0.005, 0.02, (n_pages, hkv, page, 1)),
+                     jnp.bfloat16)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+    bt = jnp.asarray([[0, 2, 4], [5, 1, 99]], jnp.int32)
+    pos = jnp.asarray([40, 20], jnp.int32)
+    out = flash_attention_decode_paged(q, kp, vp, bt, pos, window=window,
+                                       k_scale_pages=ks, v_scale_pages=vs)
+    gold = ref.paged_attention_ref(q, kp, vp, bt, pos, window=window,
+                                   k_scale_pages=ks, v_scale_pages=vs)
     assert float(jnp.abs(out - gold).max()) <= 1e-3
 
 
