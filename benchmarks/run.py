@@ -584,6 +584,129 @@ def bench_paged_families():
             f"groups={','.join(sorted(bat.n_pages))};tokens_equal=1")
 
 
+def bench_prefix_hit_ttft():
+    """Prefix cache: TTFT of a CACHED prompt vs a cold one.  A cold
+    admission pays ceil(plen/chunk) prefill chunks; a prefix-cache hit
+    attaches the retired prompt's shared pages and pays a single
+    catch-up chunk — TTFT collapses to one decode-sized step.  Token
+    equality of the hit vs its own cold run is asserted inline (the
+    grid-aligned catch-up makes it bit-exact, not just argmax-stable).
+    main() exits nonzero unless cached TTFT is >= 5x faster."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    plen, chunk, page, max_seq = ((96, 8, 8, 128) if SMOKE
+                                  else (192, 16, 16, 256))
+    pcfg = dataclasses.replace(cfg, kv_page_size=page, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=max_seq,
+                            prefill_chunk=chunk)
+    rng = np.random.default_rng(7)
+
+    def serve_one(prompt, rid):
+        """Admit + drain the prefill by hand so TTFT (submit -> first
+        token) is measured without decode steps in the window."""
+        r = Request(rid=rid, prompt=prompt, max_new=2)
+        t = threading.Thread(target=lambda: bat.submit(r))
+        t.start()
+        t0 = time.perf_counter()
+        while not bat._admitting:
+            bat.admit()
+        while bat._admitting:
+            bat._prefill_step()
+        ttft = time.perf_counter() - t0
+        while any(s is not None for s in bat._slot_req):
+            bat.step()
+        return ttft, drain(r)
+
+    warm = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    serve_one(warm, 0)                          # compile chunk + decode
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    cold_ttft, cold_toks = serve_one(prompt, 1)
+    cached_ttft, cached_toks = serve_one(prompt, 2)
+    assert bat.prefix_hits >= 1, "second serve was not a prefix hit"
+    assert cached_toks == cold_toks, "prefix_hit_ttft: hit != cold tokens"
+    speedup = cold_ttft / max(cached_ttft, 1e-9)
+    row("prefix_hit_ttft", cached_ttft * 1e6,
+        f"cold_ttft_us={cold_ttft * 1e6:.0f};"
+        f"cached_ttft_us={cached_ttft * 1e6:.0f};"
+        f"speedup={speedup:.1f}x;plen={plen};chunk={chunk};"
+        f"hit_chunks=1;cold_chunks={-(-plen // chunk)};tokens_equal=1")
+    RESULTS["prefix_hit_ttft"]["cold_ttft_us"] = round(cold_ttft * 1e6, 1)
+    RESULTS["prefix_hit_ttft"]["cached_ttft_us"] = round(cached_ttft * 1e6, 1)
+
+
+def bench_prefix_capacity():
+    """Prefix cache: admitted slots at EQUAL pool size when n clients
+    share a system prompt.  Without sharing every client allocates the
+    whole prompt; with the prefix cache the system prompt's pages are
+    attached (refcounted) and each client only allocates its private
+    suffix — strictly more concurrent slots fit the same pool.  main()
+    exits nonzero if sharing ever admits <= the no-sharing count."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    page, sys_len, suf_len = 8, 32, 7           # 4 shared + 1 private page
+    n_clients, pool, max_seq = 8, 12, 64
+    rng = np.random.default_rng(8)
+    sysp = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    prompts = [np.concatenate([sysp, rng.integers(
+        0, cfg.vocab_size, suf_len).astype(np.int32)])
+        for _ in range(n_clients)]
+
+    def one(sharing: bool):
+        pcfg = dataclasses.replace(cfg, kv_page_size=page,
+                                   prefix_cache=sharing)
+        bat = ContinuousBatcher(pcfg, params, n_slots=n_clients,
+                                max_seq=max_seq, n_pages=pool)
+        # pre-seed: one retired request leaves the system prompt cached
+        # (sharing) or simply returns its pages (no sharing).
+        seed = Request(rid=99, prompt=sysp, max_new=2)
+        t = threading.Thread(target=lambda: bat.submit(seed))
+        t.start()
+        bat.run(1)
+        t.join()
+        drain(seed)
+        reqs = [Request(rid=i, prompt=p, max_new=2)
+                for i, p in enumerate(prompts)]
+        prod = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+        prod.start()
+        time.sleep(0.05)                        # let the FIFO fill
+        progress = True
+        while progress:                         # admit the burst, no decode
+            progress = bat.admit() > 0
+            while bat._admitting:
+                bat._prefill_step()
+                progress = True
+        inflight = sum(r is not None for r in bat._slot_req)
+        bat.run(1 + n_clients)
+        prod.join()
+        outs = [drain(r) for r in reqs]
+        return inflight, outs, bat
+
+    noshare_inflight, noshare_out, _ = one(sharing=False)
+    shared_inflight, shared_out, bat = one(sharing=True)
+    assert shared_out == noshare_out, "prefix_capacity: tokens diverged"
+    row("prefix_capacity", 0.0,
+        f"pool_pages={pool};clients={n_clients};"
+        f"noshare_inflight={noshare_inflight};"
+        f"shared_inflight={shared_inflight};"
+        f"capacity_x={shared_inflight / max(noshare_inflight, 1):.1f};"
+        f"hits={bat.prefix_hits};shared_pages_peak={bat.peak_pages};"
+        f"tokens_equal=1")
+    RESULTS["prefix_capacity"]["noshare_inflight"] = noshare_inflight
+    RESULTS["prefix_capacity"]["shared_inflight"] = shared_inflight
+
+
 # Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
 # workloads (fewer requests/lengths), so they write a separate
 # BENCH_serve_smoke.json — only same-mode snapshots are diffable.
@@ -591,7 +714,7 @@ SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
               "batcher_throughput", "prefill_bucketed", "paged_capacity",
               "serve_longprompt_dense", "serve_longprompt_paged",
               "bursty_admission", "serve_family_gemma3",
-              "serve_family_int8")
+              "serve_family_int8", "prefix_hit_ttft", "prefix_capacity")
 
 
 def main(argv=None) -> None:
@@ -623,6 +746,8 @@ def main(argv=None) -> None:
     bench_chunked_prefill_latency()
     bench_bursty_admission()
     bench_paged_families()
+    bench_prefix_hit_ttft()
+    bench_prefix_capacity()
 
     out_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)),
@@ -670,6 +795,27 @@ def main(argv=None) -> None:
               f"reserve-at-admission at equal pool size: "
               f"lazy={burst.get('lazy_inflight')} < "
               f"reserve={burst.get('reserve_inflight')}", flush=True)
+        raise SystemExit(1)
+    # 4. a prefix-cache hit must collapse TTFT: one catch-up chunk vs
+    #    ceil(plen/chunk) cold chunks — anything under 5x means the
+    #    cache is not actually skipping prefill.
+    ph = RESULTS.get("prefix_hit_ttft", {})
+    if ph and ph.get("cached_ttft_us", 0) * 5.0 > ph.get(
+            "cold_ttft_us", float("inf")):
+        print(f"FATAL: prefix-cache-hit TTFT "
+              f"({ph.get('cached_ttft_us'):.0f}us) is not >= 5x faster "
+              f"than cold ({ph.get('cold_ttft_us'):.0f}us) — the cache "
+              f"is not skipping prefill", flush=True)
+        raise SystemExit(1)
+    # 5. sharing a system prompt must fit strictly more concurrent
+    #    slots in the same pool than exclusive page ownership.
+    pc = RESULTS.get("prefix_capacity", {})
+    if pc and pc.get("shared_inflight", 0) <= pc.get(
+            "noshare_inflight", float("inf")):
+        print(f"FATAL: prefix sharing admitted no more slots than "
+              f"exclusive ownership at equal pool size: "
+              f"shared={pc.get('shared_inflight')} <= "
+              f"noshare={pc.get('noshare_inflight')}", flush=True)
         raise SystemExit(1)
 
 

@@ -15,8 +15,11 @@ python -m pytest -x -q
 # so every CI run leaves a machine-readable perf snapshot behind without
 # clobbering the committed full-run BENCH_serve.json trajectory.  The serve
 # set includes the paged-KV rows (paged_capacity, serve_longprompt_*,
-# bursty_admission, paged-vs-dense for gemma3/int8); benchmarks.run exits
-# NONZERO — failing this script — if paged tokens-in-flight capacity ever
-# regresses below dense, or if lazy decode growth admits fewer concurrent
-# slots than reserve-at-admission at equal pool size.
+# bursty_admission, paged-vs-dense for gemma3/int8) and the prefix-cache
+# rows (prefix_hit_ttft, prefix_capacity); benchmarks.run exits NONZERO —
+# failing this script — if paged tokens-in-flight capacity ever regresses
+# below dense, if lazy decode growth admits fewer concurrent slots than
+# reserve-at-admission at equal pool size, if a prefix-cache-hit TTFT is
+# not >= 5x faster than the cold admission, or if sharing a system prompt
+# does not admit strictly more slots than exclusive pages at equal pool.
 python -m benchmarks.run --smoke --serve

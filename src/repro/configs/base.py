@@ -94,6 +94,23 @@ class ModelConfig:
     kv_page_size: int = 0
     prefill_chunk: int = 0            # chunked-prefill chunk tokens (0 = auto)
     prefill_interleave: int = 1       # decode steps between prefill chunks
+    # prefix cache (paged mode only): retired prompts linger as shared
+    # pages in a radix-tree PrefixIndex; a later request with the same
+    # prompt prefix attaches those pages (refcounted, copy-on-write past
+    # the divergence point) and skips prefill for the matched span.
+    # Requires every page group of the layout to be shareable (flat
+    # GQA / MLA latent / int8+scales are; gemma3's ring local group is
+    # not, so gemma3 silently keeps exclusive pages).
+    prefix_cache: bool = False
+    prefix_block: int = 0             # match granularity tokens (0 = page)
+    # chunked-prefill exactness: the FINAL chunk recomputes the whole
+    # remaining prompt span in one full-precision pass (pow2-bucketed
+    # shape), so the installed K/V — and hence every later decode read —
+    # is bit-identical to a single dense prefill regardless of how the
+    # prompt was chunked.  Costs up to one extra prefill of FLOPs; the
+    # intermediate chunks still run so decode interleaving keeps its
+    # latency bound.
+    prefill_exact: bool = False
     # reserve decode pages up-front at admission (plen + max_new) instead
     # of the default lazy growth (prompt pages only; decode pages are
     # allocated on demand, preempting the lowest-priority slot when the

@@ -31,23 +31,43 @@ def main(argv=None):
                          "(page pools + chunked prefill)")
     ap.add_argument("--pages", type=int, default=0,
                     help="page pool size (default: dense-equivalent)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical prompt prefixes via the "
+                         "refcounted page pool (paged mode only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="first N prompt tokens identical across all "
+                         "requests (system-prompt workload; demos "
+                         "--prefix-cache hits)")
+    ap.add_argument("--prefill-exact", action="store_true",
+                    help="recompute prompt K/V at the final chunk so "
+                         "chunked prefill is bit-exact vs dense")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
-    if args.page_size:
+    if args.page_size or args.prefix_cache or args.prefill_exact:
         import dataclasses
-        cfg = dataclasses.replace(cfg, kv_page_size=args.page_size)
+        page = args.page_size or cfg.kv_page_size
+        if args.prefix_cache and not page:
+            ap.error("--prefix-cache needs the paged batcher: pass "
+                     "--page-size as well")
+        cfg = dataclasses.replace(cfg, kv_page_size=page,
+                                  prefix_cache=args.prefix_cache,
+                                  prefill_exact=args.prefill_exact)
     params = registry.init(cfg, args.seed)
     rng = np.random.default_rng(args.seed)
 
     batcher = ContinuousBatcher(cfg, params, n_slots=args.slots,
                                 max_seq=args.max_seq,
                                 n_pages=args.pages or None)
+    sysp = rng.integers(0, cfg.vocab_size,
+                        min(args.shared_prefix,
+                            args.prompt_len)).astype(np.int32)
     reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        args.prompt_len).astype(np.int32),
+                    prompt=np.concatenate([sysp, rng.integers(
+                        0, cfg.vocab_size,
+                        args.prompt_len - len(sysp)).astype(np.int32)]),
                     max_new=args.max_new)
             for i in range(args.requests)]
 
@@ -68,10 +88,26 @@ def main(argv=None):
         total_tokens += len(out)
         print(f"req {r.rid}: {out[:12]}{'...' if len(out) > 12 else ''}")
     if batcher.paged:
+        st = batcher.stats()
         pool = ",".join(f"{k}:{v}" for k, v in sorted(batcher.n_pages.items()))
         mode = (f"paged(page={batcher.page_size},pool={pool},"
                 f"chunks={batcher.prefill_chunks},"
                 f"preempt={batcher.preemptions})")
+        if batcher.prefix_cache:
+            print(f"prefix-cache: hit-rate "
+                  f"{st['prefix_hit_rate']:.2f} "
+                  f"({st['prefix_hits']}/{st['prefix_lookups']} lookups, "
+                  f"{st['prefix_hit_tokens']} tokens skipped), "
+                  f"shared pages {st['shared_pages']}, "
+                  f"cow copies {st['cow_copies']}, "
+                  f"evicted prefixes {st['prefix_evictions']}, "
+                  f"cached {st['cached_prefixes']} prefixes / "
+                  f"{st['cached_prefix_pages']} pages, "
+                  f"pools {st['pools']}")
+        else:
+            print(f"pages: shared {st['shared_pages']}, "
+                  f"cow copies {st['cow_copies']}, "
+                  f"pools {st['pools']}")
     else:
         mode = "dense"
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "

@@ -19,6 +19,12 @@ onto shared device page pools:
 * **spill/restore** — device->host page extraction and re-insertion,
   used by slot preemption to park a sequence's KV host-side and resume
   it bit-identically later.
+* **shareability + copy** — each ``PageGroup`` declares whether its
+  pages may be aliased across sequences (the prefix cache): flat groups
+  are shareable (a page holds a fixed positional span), ring window
+  groups are not (content depends on the wrap position).
+  ``copy_pages`` is the device-side copy-on-write primitive: duplicate
+  a shared page into a private one before the first diverging write.
 
 The model-side read/write paths (scatter-append, gather, masks, the
 flash block-table kernel) live in ``models.layers`` /
@@ -54,11 +60,23 @@ def ring_blocks(window: int, page: int) -> int:
 
 
 class PageGroup:
-    """One independently allocated page-id space of a layout."""
+    """One independently allocated page-id space of a layout.
 
-    def __init__(self, name: str, window: Optional[int] = None):
+    ``shareable`` declares whether pages of this group may be referenced
+    by several sequences at once (the prefix cache): flat groups are —
+    a physical page holds the K/V of a fixed positional span, identical
+    for every request sharing the prompt prefix.  Ring-of-pages window
+    groups are NOT: a ring page's content depends on how far the ring
+    has wrapped (the same table entry holds different logical pages at
+    different decode positions), so two sequences can never alias one.
+    """
+
+    def __init__(self, name: str, window: Optional[int] = None,
+                 shareable: Optional[bool] = None):
         self.name = name
         self.window = window          # ring-of-pages group when set
+        self.shareable = (window is None) if shareable is None \
+            else bool(shareable)
 
     @property
     def ring(self) -> bool:
@@ -83,6 +101,15 @@ class CacheLayout:
             if g.name == name:
                 return g
         raise KeyError(name)
+
+    @property
+    def prefix_shareable(self) -> bool:
+        """True iff EVERY page group can alias pages across sequences —
+        the prefix cache needs all groups shareable, since a cache hit
+        attaches the matched prefix in every group at once (a layout
+        with a ring group, e.g. gemma3's local layers, cannot serve the
+        local K/V of a skipped prefill from shared pages)."""
+        return all(g.shareable for g in self.groups)
 
     def n_blocks(self, name: str, max_seq: int) -> int:
         """Block-table width for a group."""
@@ -128,6 +155,26 @@ class CacheLayout:
         new = jax.tree.map(
             lambda a, d: a.at[sel].set(jnp.asarray(d).astype(a.dtype)),
             pools[name], data)
+        out = dict(pools)
+        out[name] = new
+        return out
+
+    # -- copy-on-write ----------------------------------------------------------------
+
+    def copy_pages(self, pools, name: str, src: Sequence[int],
+                   dst: Sequence[int]):
+        """Device-side page copy (every layer): duplicate the ``src``
+        physical pages into ``dst``.  This is the copy-on-write
+        primitive — a slot about to write into a page it shares with the
+        prefix cache first copies it into a freshly allocated private
+        page, then redirects its block-table entry.  No host round-trip:
+        one gather + one scatter per pool leaf."""
+        ax = self.page_axis(name)
+        si = jnp.asarray(np.asarray(src, np.int32))
+        sel = (slice(None),) * ax + (np.asarray(dst, np.int32),)
+        new = jax.tree.map(
+            lambda a: a.at[sel].set(jnp.take(a, si, axis=ax)),
+            pools[name])
         out = dict(pools)
         out[name] = new
         return out

@@ -509,7 +509,8 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
                           pages: Dict[str, jnp.ndarray],
                           block_tab: jnp.ndarray, pos: jnp.ndarray,
                           ring: bool = False,
-                          last_idx: Optional[jnp.ndarray] = None):
+                          last_idx: Optional[jnp.ndarray] = None,
+                          cache_offset: Optional[jnp.ndarray] = None):
     """Pre-norm attention against a *paged* KV cache.
 
     x: (b, s, d) — s == 1 is a decode step, s > 1 a prefill chunk whose
@@ -521,7 +522,13 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
     unallocated (writes through them drop; reads are clamped and
     masked).  ``pos``: (b,) int32 start position per row.  ``last_idx``
     (chunk mode): per-row index of the last TRUE token in the chunk —
-    padded tail positions are never written.
+    padded tail positions are never written.  ``cache_offset`` (chunk
+    mode, prefix cache): per-row (b,) position below which the cache is
+    *read-only* — a prefix-cache hit attaches shared pages whose K/V
+    already exist, and the catch-up prefill must never rewrite them
+    (rewriting would perturb the original writer's bits for every other
+    sequence aliasing the page); writes at positions < cache_offset are
+    masked to the invalid page id and dropped.
 
     ``ring=False`` (flat layout): logical page j lives at table entry j;
     sliding windows apply the (qpos - window, qpos] band in the mask,
@@ -570,6 +577,8 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
         keep = logical < n_blocks
     if last_idx is not None:
         keep &= jnp.arange(s)[None, :] <= last_idx[:, None]
+    if cache_offset is not None:
+        keep &= positions >= cache_offset[:, None]
     wp = jnp.take_along_axis(block_tab, tab_idx, axis=1)
     wp = jnp.where(keep, wp, n_pages)                # invalid id -> dropped
     wo = positions % page
@@ -594,7 +603,7 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
 
     # --- read ------------------------------------------------------------------
     page_base = _ring_page_base(pos, page, n_blocks) if ring else None
-    if cfg.decode_flash and s == 1:
+    if cfg.decode_flash and s == 1 and cache_offset is None:
         # write-then-read through the block-table kernel.
         from ..kernels.flash_attention import flash_attention_decode_paged
         o = flash_attention_decode_paged(
@@ -784,7 +793,8 @@ def mla_apply(cfg, p, x, *, cache=None, pos=None):
 
 def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
                     block_tab: jnp.ndarray, pos: jnp.ndarray,
-                    last_idx: Optional[jnp.ndarray] = None):
+                    last_idx: Optional[jnp.ndarray] = None,
+                    cache_offset: Optional[jnp.ndarray] = None):
     """MLA absorbed attention against a *paged* compressed latent cache.
 
     The pages hold the latent rows themselves — ``c_kv`` pages of shape
@@ -813,11 +823,15 @@ def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
     n_pages, page, _ = cp.shape
     n_blocks = block_tab.shape[1]
 
-    # append: scatter latent rows (padded chunk tails write nowhere).
+    # append: scatter latent rows (padded chunk tails write nowhere;
+    # positions below cache_offset live in shared prefix pages and are
+    # read-only — see attention_apply_paged).
     logical = positions // page
     keep = logical < n_blocks
     if last_idx is not None:
         keep &= jnp.arange(s)[None, :] <= last_idx[:, None]
+    if cache_offset is not None:
+        keep &= positions >= cache_offset[:, None]
     wp = jnp.take_along_axis(block_tab,
                              jnp.minimum(logical, n_blocks - 1), axis=1)
     wp = jnp.where(keep, wp, n_pages)

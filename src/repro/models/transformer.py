@@ -44,13 +44,15 @@ def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
                 cache_len: Optional[int] = None,
                 last_pos: Optional[jnp.ndarray] = None,
                 block_tab: Optional[jnp.ndarray] = None,
-                ring: bool = False):
+                ring: bool = False,
+                cache_offset: Optional[jnp.ndarray] = None):
     if mode in ("decode", "chunk"):
         if block_tab is not None:
             return L.attention_apply_paged(
                 cfg, p, x, window=window, theta=theta, pages=cache,
                 block_tab=block_tab, pos=pos, ring=ring,
-                last_idx=last_pos if mode == "chunk" else None)
+                last_idx=last_pos if mode == "chunk" else None,
+                cache_offset=cache_offset if mode == "chunk" else None)
         if mode == "chunk":
             raise NotImplementedError("chunk mode requires a paged cache")
         return L.attention_apply(cfg, p, x, window=window, theta=theta,
@@ -92,11 +94,12 @@ def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
 
 
 def _mla_block(cfg, p, x, *, cache, pos, mode, cache_len=None,
-               block_tab=None, last_pos=None):
+               block_tab=None, last_pos=None, cache_offset=None):
     if block_tab is not None and mode in ("decode", "chunk"):
         return L.mla_apply_paged(
             cfg, p, x, pages=cache, block_tab=block_tab, pos=pos,
-            last_idx=last_pos if mode == "chunk" else None)
+            last_idx=last_pos if mode == "chunk" else None,
+            cache_offset=cache_offset if mode == "chunk" else None)
     if mode == "chunk":
         raise NotImplementedError("chunk mode requires a paged cache")
     if mode == "decode":
@@ -159,13 +162,13 @@ def dense_blocks(cfg):
              "mlp": L.mlp_decls(cfg, (Ln,))}
 
     def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
-              block_tab=None):
+              block_tab=None, cache_offset=None):
         w = cfg.sliding_window
         cl = min(cache_len, w) if (w and cache_len) else cache_len
         x, nc = _attn_block(cfg, p["attn"], x, window=w,
                             theta=cfg.rope_theta, cache=cache, pos=pos,
                             mode=mode, cache_len=cl, last_pos=last_pos,
-                            block_tab=block_tab)
+                            block_tab=block_tab, cache_offset=cache_offset)
         x = L.mlp_apply(cfg, p["mlp"], x)
         return x, nc
 
@@ -188,7 +191,7 @@ def gemma3_blocks(cfg):
         return None, cfg.rope_theta_global
 
     def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
-              block_tab=None):
+              block_tab=None, cache_offset=None):
         # Paged serving: ``block_tab`` is the {"local", "global"} table
         # dict and ``cache`` the per-group page pools for this layer
         # group.  Local (sliding-window) layers run the ring-of-pages
@@ -209,7 +212,8 @@ def gemma3_blocks(cfg):
                 x, nc = _attn_block(cfg, pi["attn"], x, window=window,
                                     theta=theta, cache=ci, pos=pos,
                                     mode=mode, last_pos=last_pos,
-                                    block_tab=bt, ring=ring)
+                                    block_tab=bt, ring=ring,
+                                    cache_offset=cache_offset)
                 x = L.mlp_apply(cfg, pi["mlp"], x)
                 (local_caches if i < n_local else global_caches).append(nc)
                 continue
@@ -255,13 +259,13 @@ def moe_blocks(cfg):
              "moe": L.moe_decls(cfg, (Ln,))}
 
     def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
-              block_tab=None):
+              block_tab=None, cache_offset=None):
         w = cfg.sliding_window
         cl = min(cache_len, w) if (w and cache_len) else cache_len
         x, nc = _attn_block(cfg, p["attn"], x, window=w,
                             theta=cfg.rope_theta, cache=cache, pos=pos,
                             mode=mode, cache_len=cl, last_pos=last_pos,
-                            block_tab=block_tab)
+                            block_tab=block_tab, cache_offset=cache_offset)
         x = L.moe_apply(cfg, p["moe"], x)
         return x, nc
 
@@ -284,18 +288,20 @@ def deepseek_blocks(cfg):
     }
 
     def apply_first(cfg, p, x, cache, pos, mode, cache_len=None,
-                    last_pos=None, block_tab=None):
+                    last_pos=None, block_tab=None, cache_offset=None):
         x, nc = _mla_block(cfg, p["attn"], x, cache=cache, pos=pos,
                            mode=mode, cache_len=cache_len,
-                           block_tab=block_tab, last_pos=last_pos)
+                           block_tab=block_tab, last_pos=last_pos,
+                           cache_offset=cache_offset)
         x = L.mlp_apply(cfg, p["mlp"], x)
         return x, nc
 
     def apply_rest(cfg, p, x, cache, pos, mode, cache_len=None,
-                   last_pos=None, block_tab=None):
+                   last_pos=None, block_tab=None, cache_offset=None):
         x, nc = _mla_block(cfg, p["attn"], x, cache=cache, pos=pos,
                            mode=mode, cache_len=cache_len,
-                           block_tab=block_tab, last_pos=last_pos)
+                           block_tab=block_tab, last_pos=last_pos,
+                           cache_offset=cache_offset)
         x = L.moe_apply(cfg, p["moe"], x)
         return x, nc
 
@@ -312,7 +318,7 @@ def mamba2_blocks(cfg):
     decls = {"ssm": S.mamba2_decls(cfg, (Ln,))}
 
     def apply(cfg, p, x, cache, pos, mode, cache_len=None, last_pos=None,
-              block_tab=None):
+              block_tab=None, cache_offset=None):
         return _mamba_block(cfg, p["ssm"], x, cache=cache, pos=pos, mode=mode)
 
     def cache_decl(batch, max_seq):
@@ -339,7 +345,7 @@ def zamba2_blocks(cfg):
         decls["ssm_tail"] = S.mamba2_decls(cfg, (tail,))
 
     def apply_group(cfg, p_g, shared, x, cache, pos, mode, cache_len=None,
-                    last_pos=None, block_tab=None):
+                    last_pos=None, block_tab=None, cache_offset=None):
         mamba_caches = []
         for i in range(k):
             ci = (_tree_idx(cache["ssm"], i)
@@ -400,7 +406,7 @@ def musicgen_blocks(cfg):
         return x + constrain(y, "batch", None, "embed")
 
     def apply(cfg, p, x, cond, cache, pos, mode, cache_len=None,
-              last_pos=None, block_tab=None):
+              last_pos=None, block_tab=None, cache_offset=None):
         x, nc = _attn_block(cfg, p["attn"], x, window=None,
                             theta=cfg.rope_theta, cache=cache, pos=pos,
                             mode=mode, cache_len=cache_len,
@@ -511,12 +517,13 @@ def _embed_input(cfg, params, batch) -> jnp.ndarray:
 
 
 def _scan_blocks(cfg, apply, blocks_p, x, cache, pos, mode, cache_len,
-                 last_pos=None, block_tab=None):
+                 last_pos=None, block_tab=None, cache_offset=None):
     def body(carry, xs):
         x = carry
         p_i, c_i = xs
         x, nc = apply(cfg, p_i, x, c_i, pos, mode, cache_len=cache_len,
-                      last_pos=last_pos, block_tab=block_tab)
+                      last_pos=last_pos, block_tab=block_tab,
+                      cache_offset=cache_offset)
         return x, nc
 
     body = _remat(cfg, body)
@@ -532,7 +539,8 @@ def _scan_blocks(cfg, apply, blocks_p, x, cache, pos, mode, cache_len,
 def forward(cfg, params, batch, mode: str = "train",
             cache: Optional[Any] = None, pos: Optional[jnp.ndarray] = None,
             cache_len: Optional[int] = None,
-            last_pos: Optional[jnp.ndarray] = None):
+            last_pos: Optional[jnp.ndarray] = None,
+            cache_offset: Optional[jnp.ndarray] = None):
     """train -> logits (b, s, Vp); prefill -> (last logits, cache);
     decode/chunk -> (logits, new cache).
 
@@ -550,6 +558,13 @@ def forward(cfg, params, batch, mode: str = "train",
     ``mode="chunk"`` runs a multi-token prefill chunk against the paged
     cache (x at positions pos..pos+s-1), enabling chunked prefill
     interleaved with decode.  Returns the updated pools as the new cache.
+
+    ``cache_offset`` (chunk mode, prefix cache): (b,) int32 — the cache
+    is *read-only below this position*.  A prefix-cache hit starts its
+    catch-up prefill at the divergence point with the matched prefix
+    already resident in shared pages; suppressing writes below the
+    offset keeps those pages bit-stable for every sequence aliasing
+    them.  ``None`` (or 0) preserves the plain chunked-prefill behavior.
     """
     dtype = jnp.dtype(cfg.dtype)
     params = jax.tree.map(
@@ -597,10 +612,12 @@ def forward(cfg, params, batch, mode: str = "train",
                 else None
         x, c_first = _scan_blocks(cfg, apply_first, blocks_p["first"], x,
                                   cf, pos, mode, cache_len,
-                                  last_pos=last_pos, block_tab=bt)
+                                  last_pos=last_pos, block_tab=bt,
+                                  cache_offset=cache_offset)
         x, c_rest = _scan_blocks(cfg, apply_rest, blocks_p["rest"], x,
                                  cr, pos, mode, cache_len,
-                                 last_pos=last_pos, block_tab=bt)
+                                 last_pos=last_pos, block_tab=bt,
+                                 cache_offset=cache_offset)
         new_cache = None if mode == "train" else {"first": c_first,
                                                   "rest": c_rest}
         if bt is not None:
@@ -645,7 +662,7 @@ def forward(cfg, params, batch, mode: str = "train",
         apply = fam[1]
 
         def apply2(cfg, p, x, c, pos, mode, cache_len=None, last_pos=None,
-                   block_tab=None):
+                   block_tab=None, cache_offset=None):
             return apply(cfg, p, x, cond, c, pos, mode, cache_len,
                          last_pos=last_pos, block_tab=block_tab)
 
@@ -655,7 +672,8 @@ def forward(cfg, params, batch, mode: str = "train",
         apply = fam[1]
         x, new_cache = _scan_blocks(cfg, apply, blocks_p, x, cache, pos,
                                     mode, cache_len, last_pos=last_pos,
-                                    block_tab=block_tab)
+                                    block_tab=block_tab,
+                                    cache_offset=cache_offset)
 
     x = L.rmsnorm(x, params["final_norm"])
     if mode in ("prefill", "chunk"):

@@ -54,6 +54,29 @@ a retire frees pages — it is never errored.  A request that could not
 fit in an empty pool is rejected (its stream closes) instead of
 livelocking.
 
+Refcounted prefix cache (``cfg.prefix_cache``)
+----------------------------------------------
+Page ownership is *shared*, not exclusive: the ``PageAllocator`` is
+refcounted and a radix-tree ``PrefixIndex`` (``serve.prefix_cache``)
+maps blocks of prompt tokens to the physical pages that already hold
+their K/V.  Retiring requests *decref* their prompt pages into the
+index instead of freeing them; a later request whose prompt shares the
+prefix attaches those pages (incref) and starts its chunked prefill at
+the divergence point — a fully cached prompt's TTFT is one decode-sized
+step.  Writes below the matched offset are suppressed in the kernels
+(``cache_offset``), and the first write *past* a shared page — the
+catch-up prefill crossing a mid-page divergence, or decode growing past
+a fully matched prompt — copies the page first (copy-on-write via the
+layout), so shared pages stay bit-stable for every sequence aliasing
+them.  Cached prefixes linger until pool pressure LRU-evicts them;
+eviction always runs before any live slot is preempted.  Preemption of
+a slot holding shared pages spills only its private suffix — the
+parked record keeps the refcounts and resume re-attaches the same
+physical pages.  Sharing needs every page group of the ``CacheLayout``
+to declare itself shareable: flat GQA, MLA latent, and int8+scale
+groups are; gemma3's ring-of-pages local group is not (ring content
+depends on wrap position), so gemma3 keeps exclusive pages.
+
 Chunked prefill
 ---------------
 Dense admission prefils a full ``n_slots``-row padded batch per pow2
@@ -85,6 +108,7 @@ from ..core.stream import Stream, StreamClosed
 from ..models import registry
 from ..models import params as PP
 from ..models.cache_layouts import get_layout
+from .prefix_cache import PageAllocator, PrefixIndex
 from .serve_loop import make_chunk_prefill_step, make_paged_decode_step
 
 _MIN_BUCKET = 8            # smallest prefill bucket (pad-to-power-of-two)
@@ -97,46 +121,6 @@ def _next_pow2(n: int) -> int:
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
-
-
-# --- page allocator -------------------------------------------------------------------
-
-
-class PageAllocator:
-    """Host-side free-list allocator for the device KV page pool.
-
-    ``alloc(n)`` returns n physical page ids or ``None`` (insufficient —
-    the caller backpressures, it never partially allocates); ``free``
-    returns pages in bulk and rejects double/foreign frees.  O(1) per
-    page; the pool itself never moves on device.
-    """
-
-    def __init__(self, n_pages: int):
-        self.n_pages = n_pages
-        self._free: List[int] = list(range(n_pages - 1, -1, -1))
-        self._used: set = set()
-
-    @property
-    def free_pages(self) -> int:
-        return len(self._free)
-
-    @property
-    def used_pages(self) -> int:
-        return len(self._used)
-
-    def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
-            return None
-        pages = [self._free.pop() for _ in range(n)]
-        self._used.update(pages)
-        return pages
-
-    def free(self, pages: Sequence[int]) -> None:
-        for p in pages:
-            if p not in self._used:
-                raise ValueError(f"free of unallocated page {p}")
-            self._used.remove(p)
-            self._free.append(p)
 
 
 # --- jitted step factories (dense path) -----------------------------------------------
@@ -214,12 +198,21 @@ class Request:
 
 @dataclasses.dataclass
 class _Admission:
-    """A request mid-chunked-prefill: owns a slot + pages, not yet decoding."""
+    """A request mid-chunked-prefill: owns a slot + pages, not yet decoding.
+
+    ``start`` is the first prompt position the catch-up prefill actually
+    computes (0 for a cold request; the divergence point for a
+    prefix-cache hit); ``cache_offset`` is the read-only boundary below
+    which the slot's pages are shared with the prefix cache and must not
+    be rewritten (== the matched token count).
+    """
     req: Request
     slot: int
     plen: int
     next_chunk: int
     n_chunks: int
+    start: int = 0
+    cache_offset: int = 0
 
 
 @dataclasses.dataclass
@@ -228,10 +221,14 @@ class _Preempted:
 
     ``pos``/``last_tok``/``remaining`` are the host mirrors of the slot's
     device state at preemption time; ``data``/``counts`` hold the spilled
-    page payloads (per page group) and how many pages each group owned.
-    Resume restores the pages bit-identically into freshly allocated
-    physical pages, so post-resume tokens exactly match an uncontended
-    run.
+    page payloads (per page group) and how many *private* pages each
+    group owned.  ``shared`` lists the leading prefix-cache pages the
+    slot still references: those are never spilled — their content is
+    immutable while shared — and the parked record keeps the slot's
+    refcount on them, so resume simply re-attaches the same physical
+    pages.  Resume restores the private pages bit-identically into
+    freshly allocated pages, so post-resume tokens exactly match an
+    uncontended run.
     """
     req: Request
     pos: int
@@ -240,6 +237,7 @@ class _Preempted:
     data: Dict[str, Any]
     counts: Dict[str, int]
     seq: int                     # admission order (preemption tie-break)
+    shared: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
 
 
 class ContinuousBatcher:
@@ -258,7 +256,10 @@ class ContinuousBatcher:
                  page_size: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  prefill_interleave: Optional[int] = None,
-                 reserve_decode: Optional[bool] = None):
+                 reserve_decode: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None,
+                 prefix_block: Optional[int] = None,
+                 prefill_exact: Optional[bool] = None):
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError("batcher demo covers LM families")
         self.cfg, self.params = cfg, params
@@ -273,6 +274,12 @@ class ContinuousBatcher:
         self.resumes = 0
         self.peak_pages = 0
         self.preempted_rids: List[int] = []    # observability (tests/benches)
+        # prefix-cache observability (stats(); all zero when disabled).
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.cow_copies = 0
+        self.prefix_evictions = 0
 
         # host mirror: which Request occupies each slot (None = free).
         self._slot_req: List[Optional[Request]] = [None] * n_slots
@@ -322,6 +329,23 @@ class ContinuousBatcher:
                            for name, n in self.n_pages.items()}
             self._slot_pages: Dict[str, List[List[int]]] = {
                 name: [[] for _ in range(n_slots)] for name in self.n_pages}
+            # leading run of each slot's pages still shared with the
+            # prefix cache (writes there require copy-on-write first).
+            self._slot_nshared: Dict[str, List[int]] = {
+                name: [0] * n_slots for name in self.n_pages}
+            self.prefill_exact = bool(
+                cfg.prefill_exact if prefill_exact is None else prefill_exact)
+            self.prefix_block = int(prefix_block or cfg.prefix_block
+                                    or self.page_size)
+            want_prefix = bool(cfg.prefix_cache if prefix_cache is None
+                               else prefix_cache)
+            # sharing needs EVERY group shareable: gemma3's ring local
+            # group is not, so it keeps exclusive pages silently.
+            self.prefix_cache = want_prefix and self.layout.prefix_shareable
+            self._prefix: Optional[PrefixIndex] = (
+                PrefixIndex([g.name for g in self.layout.groups],
+                            self.page_size, self.prefix_block)
+                if self.prefix_cache else None)
             self._admitting: Deque[_Admission] = collections.deque()
             self._preempted: List[_Preempted] = []
             self.pools = PP.init_params(
@@ -344,6 +368,8 @@ class ContinuousBatcher:
             self._chunk_fn = make_chunk_prefill_step(cfg, self.chunk,
                                                      max_seq, self.page_size)
         else:
+            self.prefix_cache = False
+            self._prefix = None
             cache_d = registry.cache_decls(cfg, 1, max_seq)
             one = PP.init_params(cache_d)  # zeros (init=zeros decls)
             self.cache = jax.tree.map(
@@ -371,6 +397,35 @@ class ContinuousBatcher:
     def total_free_pages(self) -> int:
         return sum(a.free_pages for a in self._alloc.values())
 
+    def stats(self) -> Dict[str, Any]:
+        """Serving observability snapshot: scheduling counters plus —
+        in paged mode — per-group pool occupancy and the prefix-cache
+        counters (hit rate, shared/CoW/eviction activity)."""
+        s: Dict[str, Any] = {
+            "steps": self.steps, "retired": self.retired,
+            "preemptions": self.preemptions, "resumes": self.resumes,
+            "prefill_chunks": self.prefill_chunks,
+            "peak_pages": self.peak_pages,
+        }
+        if not self.paged:
+            return s
+        s["pools"] = {name: {"free": a.free_pages, "used": a.used_pages,
+                             "shared": a.shared_pages}
+                      for name, a in self._alloc.items()}
+        s["shared_pages"] = sum(a.shared_pages for a in self._alloc.values())
+        s["cow_copies"] = self.cow_copies
+        s["prefix_cache"] = self.prefix_cache
+        if self.prefix_cache:
+            s["prefix_lookups"] = self.prefix_lookups
+            s["prefix_hits"] = self.prefix_hits
+            s["prefix_hit_rate"] = (self.prefix_hits
+                                    / max(self.prefix_lookups, 1))
+            s["prefix_hit_tokens"] = self.prefix_hit_tokens
+            s["prefix_evictions"] = self.prefix_evictions
+            s["cached_prefixes"] = self._prefix.n_nodes
+            s["cached_prefix_pages"] = self._prefix.n_pages
+        return s
+
     # -- paged admission (chunked prefill) --------------------------------------------
 
     def _full_pages_needed(self, r: Request, group: str) -> int:
@@ -395,48 +450,151 @@ class ContinuousBatcher:
     def _note_peak(self) -> None:
         self.peak_pages = max(self.peak_pages, self.total_used_pages())
 
+    def _alloc_evict(self, name: str, n: int) -> Optional[List[int]]:
+        """Alloc ``n`` pages, evicting LRU cached prefixes under
+        pressure.  Cached prefixes are strictly lower-value than any
+        live request, so they are freed (decref'd — pages still shared
+        by live slots survive via those refs) before admission
+        backpressures or any live slot is preempted."""
+        got = self._alloc[name].alloc(n)
+        while got is None and self._prefix is not None \
+                and self._prefix.n_nodes:
+            evicted = self._prefix.evict_lru()
+            if evicted is None:
+                break
+            for gname, pgs in evicted.items():
+                self._alloc[gname].free(pgs)
+            self.prefix_evictions += 1
+            got = self._alloc[name].alloc(n)
+        return got
+
     def _try_admit_paged(self, r: Request, slot: int) -> bool:
         """Reserve admission pages + a slot and start chunked prefill.
         Returns False (leaving ``r`` to the caller) when any group's
-        pool is dry — all-or-nothing across page groups."""
+        pool is dry — all-or-nothing across page groups.
+
+        With the prefix cache enabled the prompt is first matched
+        against the ``PrefixIndex``: the matched span's pages are
+        *attached* (incref, shared read-only) instead of allocated, and
+        the catch-up prefill starts at the divergence point — a fully
+        cached prompt prefills a single final token (its TTFT is one
+        decode-sized step).  A partially matched page on the divergence
+        boundary is copied (copy-on-write) into the first private page
+        when the catch-up prefill — or, under ``reserve_decode``, a
+        decode step that will never consult ``_grow_slot`` — is going to
+        write past the match."""
+        plen = len(r.prompt)
+        m = 0
+        shared: Dict[str, List[int]] = {g.name: [] for g in self.layout.groups}
+        if self.prefix_cache:
+            self.prefix_lookups += 1
+            m, shared = self._prefix.match(np.asarray(r.prompt, np.int32))
+        n_matched = _ceil_div(m, self.page_size)
+        partial = bool(m % self.page_size)
+        cow = partial and (m < plen or self.reserve_decode)
+        n_attach = n_matched - (1 if cow else 0)
+        # Pin the matched pages BEFORE anything can evict: _alloc_evict
+        # below may LRU-evict the very nodes just matched, and without
+        # this reference their pages would return to the free list and
+        # could be handed straight back as this request's own private
+        # pages — aliasing the prefix it is about to read.  The pin IS
+        # the slot's reference for the attached pages; the CoW source's
+        # pin is dropped again right after the copy.
+        pinned = {name: pgs[:n_matched] for name, pgs in shared.items()}
+        for name, pgs in pinned.items():
+            if pgs:
+                self._alloc[name].incref(pgs)
         grabbed: Dict[str, List[int]] = {}
         for g in self.layout.groups:
-            pages = self._alloc[g.name].alloc(
-                self._admit_pages_needed(r, g.name))
+            need = self._admit_pages_needed(r, g.name)
+            if g.shareable:
+                need -= n_attach
+            pages = self._alloc_evict(g.name, max(need, 0))
             if pages is None:
                 for name, pgs in grabbed.items():
                     self._alloc[name].free(pgs)
+                for name, pgs in pinned.items():
+                    if pgs:
+                        self._alloc[name].free(pgs)
                 return False
             grabbed[g.name] = pages
-        for name, pages in grabbed.items():
-            self._set_table_row(name, slot, pages)
-            self._slot_pages[name][slot] = list(pages)
+        for g in self.layout.groups:
+            name = g.name
+            attach = shared[name][:n_attach] if g.shareable else []
+            if cow and shared[name][n_attach:]:
+                # divergence mid-page: duplicate the boundary page into
+                # the first private page before any differing write.
+                self.pools = self.layout.copy_pages(
+                    self.pools, name, shared[name][n_attach:n_attach + 1],
+                    grabbed[name][:1])
+            if pinned[name][n_attach:]:            # unpin the CoW source
+                self._alloc[name].free(pinned[name][n_attach:])
+            row = attach + grabbed[name]
+            self._set_table_row(name, slot, row)
+            self._slot_pages[name][slot] = list(row)
+            self._slot_nshared[name][slot] = len(attach)
+        if cow:
+            self.cow_copies += 1
+        if m:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += m
         self._note_peak()
-        plen = len(r.prompt)
+        # The catch-up prefill starts at the CHUNK-GRID point at or
+        # below the divergence (not the divergence itself): its chunks
+        # then cover exactly the [k*chunk, (k+1)*chunk) spans a cold run
+        # covers, reading the same pool bytes + full-precision own-chunk
+        # overlay — and since a shared page's bits depend only on the
+        # matched tokens (causality), a hit is BIT-identical to a cold
+        # run, not merely argmax-stable.  Positions in [start, m) are
+        # recomputed as queries but their writes stay suppressed
+        # (cache_offset): the shared pages already hold those exact
+        # bits.  A fully cached prompt still pays a single chunk.
+        start = min(m, plen - 1)
+        start -= start % self.chunk
         self._slot_seq[slot] = self._admit_seq
         self._admit_seq += 1
         self._admitting.append(_Admission(
             req=r, slot=slot, plen=plen, next_chunk=0,
-            n_chunks=max(1, _ceil_div(plen, self.chunk))))
+            n_chunks=max(1, _ceil_div(plen - start, self.chunk)),
+            start=start, cache_offset=m))
         return True
 
     def _prefill_step(self) -> None:
-        """Run ONE chunk of the oldest mid-admission request."""
+        """Run ONE chunk of the oldest mid-admission request.
+
+        Chunks cover ``[start + c*chunk, ...)`` — ``start`` is 0 for a
+        cold prompt and the prefix-cache divergence point for a hit.
+        ``prefill_exact`` swaps the FINAL chunk for one pow2-bucketed
+        pass over the whole remaining span ``[start, plen)``: every
+        prompt position's K/V is recomputed with full-precision
+        own-chunk attention, so the installed cache is bit-identical to
+        a single dense prefill no matter how the prompt was chunked (the
+        intermediate chunks still run, keeping the decode-interleaving
+        latency bound; exactness costs up to one extra prefill of
+        FLOPs)."""
         a = self._admitting[0]
         C, c = self.chunk, a.next_chunk
-        seg = np.zeros((1, C), np.int32)
-        part = np.asarray(a.req.prompt[c * C:(c + 1) * C], np.int32)
-        seg[0, :len(part)] = part
         final = c == a.n_chunks - 1
-        last_in_chunk = (a.plen - 1 - c * C) if final else (C - 1)
+        base = a.start + c * C
+        fn = self._chunk_fn
+        if final and self.prefill_exact:
+            base = a.start
+            C = max(_next_pow2(a.plen - base), _MIN_CHUNK)
+            fn = make_chunk_prefill_step(self.cfg, C, self.max_seq,
+                                         self.page_size)
+        seg = np.zeros((1, C), np.int32)
+        part = np.asarray(a.req.prompt[base:base + C], np.int32)
+        seg[0, :len(part)] = part
+        last_in_chunk = (a.plen - 1 - base) if final else (C - 1)
         (self.pools, self.last_tok, self.pos, self.remaining, self.active,
-         tok0) = self._chunk_fn(
+         tok0) = fn(
             self.params, self.pools, self.block_tab, self.last_tok,
             self.pos, self.remaining, self.active, jnp.asarray(seg),
-            jnp.full((1,), c * C, jnp.int32),
+            jnp.full((1,), base, jnp.int32),
             jnp.full((1,), last_in_chunk, jnp.int32),
             jnp.int32(a.slot), jnp.asarray(final),
-            jnp.int32(a.plen), jnp.int32(a.req.max_new))
+            jnp.int32(a.plen), jnp.int32(a.req.max_new),
+            jnp.int32(a.cache_offset))
         self.prefill_chunks += 1
         a.next_chunk += 1
         if final:
@@ -450,16 +608,41 @@ class ContinuousBatcher:
             else:                              # retired at admission
                 a.req.out.close()
                 self.retired += 1
-                self._release_slot(a.slot)
+                self._release_slot(a.slot, prompt=a.req.prompt)
 
-    def _release_slot(self, slot: int) -> None:
-        """Bulk-free the slot's pages (every group) and invalidate its
+    def _release_slot(self, slot: int,
+                      prompt: Optional[np.ndarray] = None,
+                      keep_shared: bool = False) -> None:
+        """Release the slot's pages (every group) and invalidate its
         block table rows so later (masked) decode writes can never touch
-        reused pages."""
+        reused pages.
+
+        With the prefix cache enabled and a retiring ``prompt`` given,
+        the prompt's full token blocks are first inserted into the
+        ``PrefixIndex``: pages backing newly indexed blocks transfer the
+        slot's reference to the index — the retired prefix *lingers* as
+        cache until LRU-evicted under pool pressure — while everything
+        else (already-indexed blocks, the partial tail page, decode
+        pages) is decref'd, so pages shared with other live sequences
+        survive through their remaining refs.
+
+        ``keep_shared`` (preemption): the leading shared-prefix pages
+        keep their references — the parked ``_Preempted`` record owns
+        them until resume re-attaches the same physical pages."""
+        absorbed: frozenset = frozenset()
+        if self._prefix is not None and prompt is not None and len(prompt):
+            pages = {name: self._slot_pages[name][slot]
+                     for name in self._slot_pages}
+            absorbed = frozenset(self._prefix.insert(
+                np.asarray(prompt, np.int32), pages))
         for name in self._slot_pages:
-            if self._slot_pages[name][slot]:
-                self._alloc[name].free(self._slot_pages[name][slot])
-                self._slot_pages[name][slot] = []
+            ns = self._slot_nshared[name][slot] if keep_shared else 0
+            rest = [p for i, p in enumerate(self._slot_pages[name][slot])
+                    if i >= ns and i not in absorbed]
+            if rest:
+                self._alloc[name].free(rest)
+            self._slot_pages[name][slot] = []
+            self._slot_nshared[name][slot] = 0
             self.block_tab[name] = self.block_tab[name].at[slot].set(
                 self.n_pages[name])
 
@@ -474,49 +657,89 @@ class ContinuousBatcher:
                                          -self._slot_seq[i]))
 
     def _preempt(self, slot: int) -> None:
-        """Spill the slot's pages host-side, free them, park the request."""
+        """Spill the slot's PRIVATE pages host-side, free them, park the
+        request.  Pages still shared with the prefix cache are skipped:
+        their content is immutable while shared (writes copy first), so
+        there is nothing to spill — the parked record simply keeps the
+        slot's refcount on them and resume re-attaches the same physical
+        pages.  Freeing them would reclaim no memory anyway unless every
+        other holder also let go."""
         r = self._slot_req[slot]
         data: Dict[str, Any] = {}
         counts: Dict[str, int] = {}
+        shared: Dict[str, List[int]] = {}
         for g in self.layout.groups:
             pages = self._slot_pages[g.name][slot]
-            counts[g.name] = len(pages)
-            data[g.name] = (self.layout.spill(self.pools, g.name, pages)
-                            if pages else None)
+            ns = self._slot_nshared[g.name][slot]
+            shared[g.name] = pages[:ns]
+            priv = pages[ns:]
+            counts[g.name] = len(priv)
+            data[g.name] = (self.layout.spill(self.pools, g.name, priv)
+                            if priv else None)
         self._preempted.append(_Preempted(
             req=r, pos=self._host_pos[slot],
             last_tok=self._host_last_tok[slot],
             remaining=self._host_remaining[slot],
-            data=data, counts=counts, seq=self._slot_seq[slot]))
+            data=data, counts=counts, seq=self._slot_seq[slot],
+            shared=shared))
         self.active = self.active.at[slot].set(False)
         self._slot_req[slot] = None
-        self._release_slot(slot)
+        self._release_slot(slot, keep_shared=True)
         self.preemptions += 1
         self.preempted_rids.append(r.rid)
 
     def _grow_slot(self, slot: int) -> bool:
-        """Ensure every group holds pages for the slot's next decode
-        write; preempts other slots when the pool is dry (self-preempts
-        as a last resort).  Returns False iff the slot was preempted."""
+        """Ensure every group holds a WRITABLE page for the slot's next
+        decode write; preempts other slots when the pool is dry
+        (self-preempts as a last resort).  Returns False iff the slot
+        was preempted.
+
+        Two cases need pages: the write position crosses into an
+        unallocated logical page (plain lazy growth), or it lands inside
+        a page still shared with the prefix cache — the first write past
+        a shared prefix triggers copy-on-write: the page is duplicated
+        into a fresh private page and the block table redirected, so the
+        cached original stays bit-stable for every other sequence
+        aliasing it."""
         nxt = self._host_pos[slot]             # position decode writes next
+
+        def take_one(name: str) -> Optional[List[int]]:
+            got = self._alloc_evict(name, 1)
+            while got is None:
+                # the victim may be the growing slot itself: a
+                # low-priority grower parks rather than evicting a
+                # higher-priority decode.
+                victim = self._pick_victim()
+                if victim is None or victim == slot:
+                    self._preempt(slot)
+                    return None
+                self._preempt(victim)
+                got = self._alloc_evict(name, 1)
+            return got
+
         for g in self.layout.groups:
             need = self.layout.blocks_for(g.name, nxt + 1, self.max_seq)
             pages = self._slot_pages[g.name][slot]
             while len(pages) < need:
-                got = self._alloc[g.name].alloc(1)
+                got = take_one(g.name)
                 if got is None:
-                    # the victim may be the growing slot itself: a
-                    # low-priority grower parks rather than evicting a
-                    # higher-priority decode.
-                    victim = self._pick_victim()
-                    if victim is None or victim == slot:
-                        self._preempt(slot)
-                        return False
-                    self._preempt(victim)
-                    continue
+                    return False
                 pages.append(got[0])
                 self.block_tab[g.name] = self.block_tab[g.name].at[
                     slot, len(pages) - 1].set(got[0])
+            j = need - 1                       # page holding the write
+            if j < self._slot_nshared[g.name][slot]:
+                got = take_one(g.name)
+                if got is None:
+                    return False
+                self.pools = self.layout.copy_pages(
+                    self.pools, g.name, [pages[j]], got)
+                self._alloc[g.name].free([pages[j]])   # drop the shared ref
+                pages[j] = got[0]
+                self.block_tab[g.name] = self.block_tab[g.name].at[
+                    slot, j].set(got[0])
+                self._slot_nshared[g.name][slot] = j
+                self.cow_copies += 1
         self._note_peak()
         return True
 
@@ -543,10 +766,13 @@ class ContinuousBatcher:
                 # resumed slot always emits at least one token before it
                 # can be preempted again — without this, resuming into a
                 # still-dry pool thrashes spill/restore every step.
+                # Shared prefix pages re-attach as-is (the parked record
+                # kept the slot's refs) and count toward coverage.
+                ns = len(rec.shared.get(g.name, ()))
                 need = max(rec.counts[g.name],
                            self.layout.blocks_for(g.name, rec.pos + 1,
-                                                  self.max_seq))
-                pages = self._alloc[g.name].alloc(need)
+                                                  self.max_seq) - ns)
+                pages = self._alloc_evict(g.name, need)
                 if pages is None:
                     ok = False
                     break
@@ -557,13 +783,16 @@ class ContinuousBatcher:
                 break
             slot = free[0]
             self._preempted.pop(idx)
-            for name, pages in grabbed.items():
+            for name, priv in grabbed.items():
                 n = rec.counts[name]
                 if n:
                     self.pools = self.layout.restore(
-                        self.pools, name, rec.data[name], pages[:n])
+                        self.pools, name, rec.data[name], priv[:n])
+                pages = rec.shared.get(name, []) + priv
                 self._set_table_row(name, slot, pages)
                 self._slot_pages[name][slot] = list(pages)
+                self._slot_nshared[name][slot] = len(
+                    rec.shared.get(name, ()))
             self._note_peak()
             i32 = jnp.int32
             self.last_tok = self.last_tok.at[slot].set(
@@ -756,7 +985,10 @@ class ContinuousBatcher:
                 r.out.close()
                 self._slot_req[i] = None
                 if self.paged:
-                    self._release_slot(i)
+                    # retire: the prompt's full pages are offered to the
+                    # prefix cache (decref instead of free) so a later
+                    # identical prefix skips its prefill.
+                    self._release_slot(i, prompt=r.prompt)
                 done += 1
         self.steps += 1
         self.retired += done

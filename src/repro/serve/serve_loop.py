@@ -179,21 +179,27 @@ def make_paged_decode_step(cfg: ModelConfig, max_seq: int, page_size: int):
 @functools.lru_cache(maxsize=32)
 def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int,
                             page_size: int):
-    """Jitted single-request prefill chunk against the paged cache."""
+    """Jitted single-request prefill chunk against the paged cache.
+
+    ``cache_offset`` (traced scalar) is the prefix-cache read-only
+    boundary: positions below it live in shared prefix pages and are
+    never rewritten (0 = plain chunked prefill; one compiled program
+    serves both the cold and the cache-hit path)."""
     from ..models.cache_layouts import get_layout
     layout = get_layout(cfg, page_size)
     i32 = jnp.int32
 
     def chunk_fn(params, pools, block_tab, last_tok, pos, remaining, active,
                  tokens, pos0, last_in_chunk, slot_idx, is_final, plen,
-                 max_new):
+                 max_new, cache_offset):
         n_slots = jax.tree.leaves(block_tab)[0].shape[0]
         bt_row = {g.name: jax.lax.dynamic_index_in_dim(
             block_tab[g.name], slot_idx, 0) for g in layout.groups}
         cache = {"pages": pools, "block_tab": bt_row}
         logits, new_pools = registry.forward(
             cfg, params, {"tokens": tokens}, mode="chunk", cache=cache,
-            pos=pos0, last_pos=last_in_chunk)
+            pos=pos0, last_pos=last_in_chunk,
+            cache_offset=jnp.broadcast_to(cache_offset, (1,)))
         tok0 = jnp.argmax(logits[0, -1], -1).astype(i32)
         # final chunk installs the slot's decode state; non-final chunks
         # scatter-drop (idx == n_slots) and leave every vector untouched.

@@ -1,0 +1,443 @@
+"""Refcounted prefix cache on the page pool: allocator refcount/
+double-free hardening, radix-tree PrefixIndex matching (full-block,
+mid-page divergence, LRU eviction), cache-hit admission skipping
+prefill with token-identical output across every shareable CacheLayout
+(flat GQA, windowed flat, MLA latent, int8+scales), copy-on-write at
+both trigger points (catch-up prefill past a mid-page divergence;
+decode growth past a fully matched prompt), preemption of slots holding
+shared pages, retire-then-rehit, eviction-before-preemption ordering,
+the chunked-prefill exactness mode, and gemma3's ring-group
+non-shareability gate.
+"""
+
+import dataclasses
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import smoke_variant
+from repro.models import registry
+from repro.models.cache_layouts import get_layout
+from repro.serve.batching import ContinuousBatcher, Request, drain
+from repro.serve.prefix_cache import PageAllocator, PrefixIndex
+from repro.serve.serve_loop import greedy_generate
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    return cfg, registry.init(cfg, 0)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _greedy(cfg, params, prompt, steps, max_seq=64):
+    return list(np.asarray(greedy_generate(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, steps=steps,
+        max_seq=max_seq)[0]))
+
+
+def _serve_seq(bat, prompts, max_news):
+    """Serve requests one after another through a LIVE batcher (so the
+    prefix index accumulates across requests)."""
+    outs = []
+    for i, (p, mn) in enumerate(zip(prompts, max_news)):
+        r = Request(rid=i, prompt=p, max_new=mn)
+        t = threading.Thread(target=lambda r=r: bat.submit(r))
+        t.start()
+        bat.run(bat.retired + 1)
+        t.join()
+        outs.append(drain(r))
+    return outs
+
+
+# --- refcounted allocator -------------------------------------------------------------
+
+
+def test_allocator_refcount_share_and_release():
+    a = PageAllocator(6)
+    p = a.alloc(3)
+    assert a.used_pages == 3 and a.shared_pages == 0
+    a.incref(p)                                  # second holder
+    assert a.shared_pages == 3
+    a.free(p)                                    # first holder lets go
+    assert a.used_pages == 3 and a.free_pages == 3   # still held
+    assert a.shared_pages == 0
+    a.free(p)                                    # last holder
+    assert a.used_pages == 0 and a.free_pages == 6
+    # alloc never hands out a page that is still referenced.
+    p1 = a.alloc(2)
+    a.incref(p1)
+    p2 = a.alloc(4)
+    assert set(p1) & set(p2) == set()
+
+
+def test_allocator_double_free_and_foreign_free_hardened():
+    """The satellite regression: free/decref must validate in-range,
+    currently-allocated, and not-already-freed — a silent double free
+    used to corrupt the free list (the page would be handed out twice)."""
+    a = PageAllocator(4)
+    p = a.alloc(2)
+    a.free(p)
+    with pytest.raises(ValueError, match="already freed|unallocated"):
+        a.free(p)                                # double free
+    with pytest.raises(ValueError, match="unallocated"):
+        a.free([3] if 3 not in p else [p[0] ^ 1 ^ p[0]])  # never allocated
+    with pytest.raises(ValueError, match="out-of-range"):
+        a.free([99])
+    with pytest.raises(ValueError, match="out-of-range"):
+        a.free([-1])
+    with pytest.raises(ValueError, match="unallocated"):
+        a.incref([0])                            # incref needs a holder
+    # the failed frees must not have corrupted the free list.
+    got = a.alloc(4)
+    assert sorted(got) == [0, 1, 2, 3]
+
+
+# --- radix-tree prefix index ----------------------------------------------------------
+
+
+def test_prefix_index_full_and_partial_match():
+    idx = PrefixIndex(["kv"], page=4, block=4)
+    toks = np.arange(12, dtype=np.int32)         # 3 full blocks
+    idx.insert(toks, {"kv": [10, 11, 12]})
+    assert idx.n_nodes == 3
+    # full match of a shorter prompt
+    m, pages = idx.match(np.arange(8, dtype=np.int32))
+    assert m == 8 and pages["kv"] == [10, 11]
+    # mid-page divergence: 6 tokens match, page 11 partially
+    probe = np.asarray([0, 1, 2, 3, 4, 5, 99, 98], np.int32)
+    m, pages = idx.match(probe)
+    assert m == 6 and pages["kv"] == [10, 11]
+    # divergent branch shares the tree prefix
+    idx.insert(probe, {"kv": [20, 21]})
+    assert idx.n_nodes == 4                      # block [0..3] reused
+    m, pages = idx.match(probe)
+    assert m == 8 and pages["kv"] == [10, 21]
+    # no match
+    m, pages = idx.match(np.asarray([7, 7, 7, 7], np.int32))
+    assert m == 0 and pages["kv"] == []
+
+
+def test_prefix_index_insert_dedup_and_lru_eviction():
+    idx = PrefixIndex(["kv"], page=4, block=4)
+    absorbed = idx.insert(np.arange(8, dtype=np.int32), {"kv": [0, 1]})
+    assert absorbed == [0, 1]
+    # same tokens, different pages: nothing absorbed (older pages win)
+    absorbed = idx.insert(np.arange(8, dtype=np.int32), {"kv": [5, 6]})
+    assert absorbed == []
+    # a fresh branch; then LRU-evict: the oldest *leaf* goes first, so
+    # the shared interior block [0..3] outlives its tails.
+    branch = np.asarray([0, 1, 2, 3, 9, 9, 9, 9], np.int32)
+    idx.insert(branch, {"kv": [7, 8]})
+    idx.match(branch)                            # freshen the branch
+    ev = idx.evict_lru()
+    assert ev == {"kv": [1]}                     # stale leaf [4..7]
+    ev = idx.evict_lru()
+    assert ev == {"kv": [8]}                     # then branch leaf
+    ev = idx.evict_lru()
+    assert ev == {"kv": [0]}                     # finally the root block
+    assert idx.evict_lru() is None and idx.n_nodes == 0
+
+
+def test_prefix_index_rejects_unaligned_block():
+    with pytest.raises(ValueError, match="multiple of the page"):
+        PrefixIndex(["kv"], page=8, block=12)
+
+
+# --- cache-hit admission: token identity + skipped prefill ----------------------------
+
+
+def test_hit_skips_prefill_and_matches_cold(model):
+    """The tentpole acceptance: an identical prompt served after a
+    retire is a prefix hit — admission attaches the cached pages, the
+    catch-up prefill is ONE chunk (TTFT of a fully cached prompt is one
+    decode-sized step), and the output is token-identical to the cold
+    run."""
+    cfg, params = model
+    P = _prompt(cfg, 32, seed=10)                # 4 pages, page-aligned
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            prefill_chunk=8)
+    cold, hit = _serve_seq(bat, [P, P], [6, 6])
+    assert cold == _greedy(cfg, params, P, 6)
+    assert hit == cold
+    assert bat.prefix_hits == 1 and bat.prefix_hit_tokens == 32
+    # cold paid ceil(32/8) = 4 chunks; the hit paid exactly one.
+    assert bat.prefill_chunks == 4 + 1
+    st = bat.stats()
+    assert st["prefix_hit_rate"] == 0.5 and st["cached_prefixes"] == 4
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("minitron-4b", {"sliding_window": 16}),         # windowed flat pages
+    ("deepseek-v2-lite-16b", {}),                    # MLA latent pages
+    ("minitron-4b", {"kv_cache_dtype": "int8"}),     # int8 + scale pages
+])
+def test_hit_token_identical_across_shareable_layouts(arch, kw):
+    """Acceptance: every shareable CacheLayout serves a prefix-cache-hit
+    request with output token-identical to the cold run."""
+    cfg = dataclasses.replace(smoke_variant(configs.get(arch)), **kw)
+    params = registry.init(cfg, 0)
+    assert get_layout(cfg, 8).prefix_shareable
+    P = _prompt(cfg, 24, seed=11)
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64)
+    cold, hit = _serve_seq(bat, [P, P], [5, 5])
+    assert hit == cold == _greedy(cfg, params, P, 5)
+    assert bat.prefix_hits == 1
+
+
+def test_gemma3_ring_group_not_shareable():
+    """gemma3's local layers are a ring of pages — content depends on
+    the wrap position, so two sequences can never alias one.  The layout
+    declares it and the batcher silently keeps exclusive pages."""
+    cfg = smoke_variant(configs.get("gemma3-12b"))
+    layout = get_layout(dataclasses.replace(cfg, kv_page_size=8), 8)
+    assert not layout.group("local").shareable
+    assert layout.group("global").shareable
+    assert not layout.prefix_shareable
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    params = registry.init(cfg, 0)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64)
+    assert bat.paged and not bat.prefix_cache
+    P = _prompt(cfg, 12, seed=12)
+    cold, again = _serve_seq(bat, [P, P], [4, 4])
+    assert again == cold == _greedy(cfg, params, P, 4)
+    assert bat.prefix_hits == 0
+    assert bat.total_used_pages() == 0           # nothing lingers
+
+
+# --- copy-on-write --------------------------------------------------------------------
+
+
+def test_divergence_mid_page_cow(model):
+    """A prompt sharing 20 of 24 tokens with a cached prefix diverges
+    inside page 2: admission must copy the partial page before the
+    first differing write (the catch-up prefill resumes from token 20),
+    and BOTH requests' outputs stay exactly their cold-run tokens —
+    the copy kept the cached page bit-stable."""
+    cfg, params = model
+    P = _prompt(cfg, 24, seed=13)
+    P2 = P.copy()
+    P2[20:] = (P2[20:] + 7) % cfg.vocab_size
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64)
+    out1, out2, out1b = _serve_seq(bat, [P, P2, P], [5, 5, 5])
+    assert out1 == _greedy(cfg, params, P, 5)
+    assert out2 == _greedy(cfg, params, P2, 5)
+    assert out1b == out1                         # original prefix intact
+    assert bat.cow_copies >= 1
+    assert bat.prefix_hits >= 2
+    # the divergent branch was itself cached: its full page 2 (tokens
+    # 16..23 of P2) forked the radix tree under the shared blocks.
+    m, _ = bat._prefix.match(np.asarray(P2, np.int32))
+    assert m == 24
+
+
+def test_decode_cow_first_write_past_shared_page(model):
+    """A prompt that is a strict mid-page prefix of a cached one (m ==
+    plen, not page-aligned) attaches the partial page SHARED — no
+    prefill write touches it — and the first decode write past the
+    prompt lands inside it, triggering copy-on-write in decode growth."""
+    cfg, params = model
+    P = _prompt(cfg, 24, seed=14)
+    P3 = P[:20].copy()                           # ends mid-page
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64)
+    out1, out3, out1b = _serve_seq(bat, [P, P3, P], [5, 5, 5])
+    assert out1 == _greedy(cfg, params, P, 5)
+    assert out3 == _greedy(cfg, params, P3, 5)
+    assert out1b == out1                         # cached page untouched
+    assert bat.cow_copies >= 1
+    assert bat.prefix_hits >= 2
+
+
+# --- preemption / retire / eviction interleavings -------------------------------------
+
+
+def test_preempt_victim_holding_shared_pages_resumes_identically(model):
+    """Victim-holds-shared-pages: under pool pressure a slot attached to
+    cached prefix pages is preempted — the spill skips the shared pages
+    (immutable while shared; the parked record keeps their refcounts)
+    and resume re-attaches them — and every request still emits exactly
+    its uncontended tokens."""
+    cfg, params = model
+    sysp = _prompt(cfg, 16, seed=15)
+    p1 = np.concatenate([sysp, _prompt(cfg, 4, seed=16)])
+    p2 = np.concatenate([sysp, _prompt(cfg, 4, seed=17)])
+    golds = [_greedy(cfg, params, p, 8) for p in (p1, p2)]
+    pcfg = dataclasses.replace(cfg, kv_page_size=4, prefix_cache=True)
+    # pool 9: seed caches 4 pages; both hits attach them + 1 private
+    # page each; decode growth (2 more pages each) runs the pool dry.
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64, n_pages=9)
+    seed = Request(rid=9, prompt=sysp, max_new=2)
+    t = threading.Thread(target=lambda: bat.submit(seed))
+    t.start()
+    bat.run(1)
+    t.join()
+    drain(seed)
+    r1 = Request(rid=0, prompt=p1, max_new=8)
+    r2 = Request(rid=1, prompt=p2, max_new=8)
+    t = threading.Thread(target=lambda: (bat.submit(r1), bat.submit(r2)))
+    t.start()
+    bat.run(3)
+    t.join()
+    assert [drain(r1), drain(r2)] == golds
+    assert bat.prefix_hits == 2
+    assert bat.preemptions > 0 and bat.resumes > 0
+    # refcounts survived the spill/resume cycle: every page the index
+    # holds is accounted for, nothing leaked, nothing double-freed.
+    for name, alloc in bat._alloc.items():
+        assert alloc.used_pages == bat._prefix.n_pages
+        assert alloc.shared_pages == 0           # only the index holds them
+
+
+def test_retire_then_rehit_serves_without_recompute(model):
+    """Retired prefixes linger: a request retired long before (its slot
+    reused since) still serves a later identical prompt from cache."""
+    cfg, params = model
+    A = _prompt(cfg, 24, seed=18)
+    B = _prompt(cfg, 16, seed=19)
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=1, max_seq=64,
+                            prefill_chunk=8)
+    outs = _serve_seq(bat, [A, B, A], [4, 4, 4])
+    assert outs[0] == _greedy(cfg, params, A, 4)
+    assert outs[1] == _greedy(cfg, params, B, 4)
+    assert outs[2] == outs[0]
+    assert bat.prefix_hits == 1
+    # the rehit paid one catch-up chunk, not ceil(24/8) = 3.
+    assert bat.prefill_chunks == 3 + 2 + 1
+
+
+def test_eviction_under_pressure_frees_cache_before_preempting(model):
+    """Ordering: when the pool runs dry, LRU cached prefixes are freed
+    FIRST; live slots are only preempted if eviction cannot satisfy the
+    allocation.  Here eviction alone suffices: no preemption happens."""
+    cfg, params = model
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64, n_pages=8)
+    prompts = [_prompt(cfg, 16, seed=20 + i) for i in range(4)]
+    outs = _serve_seq(bat, prompts, [6] * 4)
+    for p, o in zip(prompts, outs):
+        assert o == _greedy(cfg, params, p, 6)
+    # the pool (8 pages) cannot cache every retired prompt (2 pages
+    # each) AND admit the next: evictions must have fired, preemption
+    # never (eviction alone kept the pool fed).
+    assert bat.prefix_evictions > 0
+    assert bat.preemptions == 0
+
+
+def test_admission_eviction_cannot_free_matched_prefix(model):
+    """Regression: the eviction loop inside a HIT admission may
+    LRU-evict the very nodes just matched.  The matched pages are
+    pinned (incref) before any eviction can run, so they can neither
+    return to the free list nor be handed back as the request's own
+    private pages — without the pin the catch-up prefill would
+    overwrite the prefix it is reading (aliased block-table row) and
+    emit garbage tokens."""
+    cfg, params = model
+    A = _prompt(cfg, 16, seed=30)                    # 2 pages, cacheable
+    X = _prompt(cfg, 30, seed=31)                    # 4 pages, stays live
+    B = np.concatenate([A, _prompt(cfg, 24, seed=32)])   # hit on A + 3 more
+    gold_x = _greedy(cfg, params, X, 2)
+    gold_b = _greedy(cfg, params, B, 4)
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64, n_pages=8)
+    (out_a,) = _serve_seq(bat, [A], [2])             # A cached: 2 nodes
+    assert bat._prefix.n_nodes == 2
+    rx = Request(rid=1, prompt=X, max_new=2)
+    t = threading.Thread(target=lambda: bat.submit(rx))
+    t.start()
+    while not bat._admitting:
+        bat.admit()
+    while bat._admitting:                            # X live: 4 pages held
+        bat._prefill_step()
+    t.join()
+    rb = Request(rid=2, prompt=B, max_new=4)
+    t = threading.Thread(target=lambda: bat.submit(rb))
+    t.start()
+    # B matches A (2 pages) but needs 3 private with only 2 free: the
+    # eviction storm evicts A's nodes — the pin must keep the matched
+    # pages from being freed out from under the admission.
+    bat.admit()
+    t.join()
+    assert bat.prefix_evictions >= 2 and bat._prefix.n_nodes == 0
+    bat.run(3)                                       # X retires, B admits
+    assert drain(rx) == gold_x
+    assert drain(rb) == gold_b                       # no aliasing: exact
+    for name, alloc in bat._alloc.items():
+        assert alloc.used_pages == bat._prefix.n_pages
+
+
+def test_unshared_behavior_unchanged_when_disabled(model):
+    """prefix_cache off (the default): retire frees everything — the
+    PR 3 invariant that all pages return to the pool still holds."""
+    cfg, params = model
+    pcfg = dataclasses.replace(cfg, kv_page_size=8)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64)
+    P = _prompt(cfg, 24, seed=25)
+    outs = _serve_seq(bat, [P, P], [4, 4])
+    assert outs[0] == outs[1] == _greedy(cfg, params, P, 4)
+    assert not bat.prefix_cache and bat.prefix_hits == 0
+    assert bat.total_used_pages() == 0
+
+
+# --- chunked-prefill exactness mode ---------------------------------------------------
+
+
+def _admit_only(cfg, params, P, chunk, exact, max_seq=64, prefix=False):
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefill_exact=exact,
+                               prefix_cache=prefix)
+    bat = ContinuousBatcher(pcfg, params, n_slots=1, max_seq=max_seq,
+                            prefill_chunk=chunk)
+    r = Request(rid=0, prompt=P, max_new=4)
+    bat.submit(r)
+    bat.admit()
+    while bat._admitting:
+        bat._prefill_step()
+    pages = bat._slot_pages["kv"][0][:len(P) // 8 + (len(P) % 8 > 0)]
+    snap = {k: np.asarray(bat.pools["kv"][k])[:, pages] for k in ("k", "v")}
+    bat.run(1)
+    return snap, drain(r), bat
+
+
+def test_prefill_exact_pool_bits_independent_of_chunking(model):
+    """The exactness satellite: with prefill_exact=True the installed
+    prompt K/V is BIT-identical no matter how the prompt was chunked
+    (the final chunk recomputes the whole span at full precision);
+    plain chunking is allowed to differ in low bits across chunk
+    boundaries.  Tokens match the greedy oracle either way."""
+    cfg, params = model
+    P = _prompt(cfg, 40, seed=26)
+    ref_snap, ref_toks, _ = _admit_only(cfg, params, P, 64, exact=False)
+    ex_snap, ex_toks, _ = _admit_only(cfg, params, P, 16, exact=True)
+    for k in ("k", "v"):
+        assert np.array_equal(ref_snap[k], ex_snap[k]), k
+    assert ref_toks == ex_toks == _greedy(cfg, params, P, 4)
+
+
+def test_prefill_exact_hit_token_identical_to_cold(model):
+    """The exactness mode's use for the prefix cache: with canonical
+    (chunking-independent) pool bits, a cache-hit decode reads exactly
+    the bytes a cold run would have written — hit output == cold output
+    even when the cold run used a different chunking."""
+    cfg, params = model
+    P = _prompt(cfg, 40, seed=27)
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True,
+                               prefill_exact=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            prefill_chunk=16)
+    cold, hit = _serve_seq(bat, [P, P], [6, 6])
+    bat2 = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                             prefill_chunk=8)    # different chunking
+    cold_b, hit_b = _serve_seq(bat2, [P, P], [6, 6])
+    assert hit == cold == cold_b == hit_b
+    assert bat.prefix_hits == 1 and bat2.prefix_hits == 1
