@@ -707,6 +707,135 @@ def bench_prefix_capacity():
     RESULTS["prefix_capacity"]["shared_inflight"] = shared_inflight
 
 
+def bench_host_tier_rehit():
+    """Tiered KV memory: TTFT of re-admitting a prefix that was EVICTED
+    from the device index — with the host tier (T1) the rehit promotes
+    the demoted pages back (one staged host->device transfer + a single
+    catch-up chunk); without it the span is recomputed chunk by chunk.
+    Token equality across both arms is asserted inline.  main() exits
+    nonzero unless restore beats recompute by >= 2x."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    plen, chunk, page, pool, max_seq = ((96, 8, 8, 14, 128) if SMOKE
+                                        else (192, 16, 16, 14, 256))
+    rng = np.random.default_rng(9)
+    P = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    F = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+
+    def serve_one(bat, prompt, rid):
+        """Admit + drain the prefill by hand so TTFT (submit -> first
+        token) is measured without decode steps in the window."""
+        r = Request(rid=rid, prompt=prompt, max_new=2)
+        t = threading.Thread(target=lambda: bat.submit(r))
+        t.start()
+        t0 = time.perf_counter()
+        while not bat._admitting:
+            bat.admit()
+        while bat._admitting:
+            bat._prefill_step()
+        ttft = time.perf_counter() - t0
+        while any(s is not None for s in bat._slot_req):
+            bat.step()
+        t.join()
+        return ttft, drain(r)
+
+    def one(budget):
+        pcfg = dataclasses.replace(cfg, kv_page_size=page,
+                                   prefix_cache=True,
+                                   kv_host_tier_bytes=budget,
+                                   tier_restore_min_tokens=0)
+        bat = ContinuousBatcher(pcfg, params, n_slots=1, max_seq=max_seq,
+                                n_pages=pool, prefill_chunk=chunk)
+        _, cold_toks = serve_one(bat, P, 0)   # cold; compiles chunk+decode
+        # 3 evict -> rehit cycles; the first doubles as transfer-shape
+        # warm-up, and the MIN is the noise-robust TTFT (the CI gate is
+        # a hard exit — a single-sample measurement would trip it on one
+        # scheduler stall, not a real regression).
+        best, rid = float("inf"), 1
+        for _ in range(3):
+            serve_one(bat, F, rid)            # pressure-evicts P's blocks
+            ttft, toks = serve_one(bat, P, rid + 1)
+            assert toks == cold_toks, "host_tier_rehit: rehit != cold"
+            best, rid = min(best, ttft), rid + 2
+        return best, toks, bat
+
+    recomp_ttft, recomp_toks, _ = one(budget=0)
+    restore_ttft, restore_toks, bat = one(budget=1 << 24)
+    assert bat._tiers.stats()["rehits"] >= 1, "no host-tier rehit happened"
+    assert restore_toks == recomp_toks, "host_tier_rehit: tokens diverged"
+    speedup = recomp_ttft / max(restore_ttft, 1e-9)
+    t = bat._tiers.stats()
+    row("host_tier_rehit", restore_ttft * 1e6,
+        f"recompute_ttft_us={recomp_ttft * 1e6:.0f};"
+        f"restore_ttft_us={restore_ttft * 1e6:.0f};"
+        f"speedup={speedup:.1f}x;plen={plen};chunk={chunk};"
+        f"restored_tokens={t['rehit_tokens']};"
+        f"h2d_bytes={t['h2d_bytes']};tokens_equal=1")
+    RESULTS["host_tier_rehit"]["recompute_ttft_us"] = round(
+        recomp_ttft * 1e6, 1)
+    RESULTS["host_tier_rehit"]["restore_ttft_us"] = round(
+        restore_ttft * 1e6, 1)
+
+
+def bench_spill_resume_latency():
+    """The staged-transfer engine vs the per-page blocking baseline it
+    replaced: spilling + restoring N pages as ONE batched gather/scatter
+    per pool leaf (all device work dispatched before the first blocking
+    copy) vs N sequential take -> copy -> scatter round-trips.  main()
+    exits nonzero if staged is ever slower than per-page."""
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.models import params as PP
+    from repro.models.cache_layouts import get_layout
+    from repro.serve.kv_tiers import StagedTransferEngine
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    page = 16
+    n_pages, n_spill = (24, 16) if SMOKE else (64, 48)
+    layout = get_layout(cfg, page)
+    pools = PP.init_params(
+        registry.paged_cache_decls(cfg, {"kv": n_pages}, page))
+    rng = np.random.default_rng(10)
+    pools = jax.tree.map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape)).astype(a.dtype),
+        pools)
+    eng = StagedTransferEngine(layout)
+    pages = list(range(n_spill))
+
+    # both arms block on their scatter output INSIDE the timed region:
+    # the staged arm's H2D+scatter is async-dispatched and nothing else
+    # forces it, while the per-page arm self-serializes through its
+    # data-dependency chain — without the explicit block the comparison
+    # would time a partially-unmeasured arm against a fully-measured one.
+    def staged():
+        data = eng.gather_host(pools, {"kv": pages})
+        return jax.block_until_ready(
+            eng.scatter_device(pools, data, {"kv": pages}))
+
+    def per_page():
+        out = pools
+        for p in pages:
+            d = layout.spill(out, "kv", [p])      # blocking copy per page
+            out = layout.restore(out, "kv", d, [p])
+        return jax.block_until_ready(out)
+
+    us_staged = timeit(staged, iters=10)
+    us_pp = timeit(per_page, iters=10)
+    nbytes = eng.d2h_bytes // max(eng.gathers, 1)   # bytes per spill
+    row("spill_resume_latency", us_staged,
+        f"per_page_us={us_pp:.1f};staged_us={us_staged:.1f};"
+        f"speedup={us_pp / max(us_staged, 1e-9):.1f}x;"
+        f"pages={n_spill};bytes_per_spill={nbytes}")
+    RESULTS["spill_resume_latency"]["per_page_us"] = round(us_pp, 1)
+    RESULTS["spill_resume_latency"]["staged_us"] = round(us_staged, 1)
+
+
 # Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
 # workloads (fewer requests/lengths), so they write a separate
 # BENCH_serve_smoke.json — only same-mode snapshots are diffable.
@@ -714,7 +843,8 @@ SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
               "batcher_throughput", "prefill_bucketed", "paged_capacity",
               "serve_longprompt_dense", "serve_longprompt_paged",
               "bursty_admission", "serve_family_gemma3",
-              "serve_family_int8", "prefix_hit_ttft", "prefix_capacity")
+              "serve_family_int8", "prefix_hit_ttft", "prefix_capacity",
+              "host_tier_rehit", "spill_resume_latency")
 
 
 def main(argv=None) -> None:
@@ -748,6 +878,8 @@ def main(argv=None) -> None:
     bench_paged_families()
     bench_prefix_hit_ttft()
     bench_prefix_capacity()
+    bench_host_tier_rehit()
+    bench_spill_resume_latency()
 
     out_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)),
@@ -817,6 +949,32 @@ def main(argv=None) -> None:
               f"shared={pc.get('shared_inflight')} <= "
               f"noshare={pc.get('noshare_inflight')}", flush=True)
         raise SystemExit(1)
+    # 6. restoring an evicted prefix from the host tier must beat
+    #    recomputing it by >= 2x — anything less means the tier is
+    #    staging pages slower than prefill rebuilds them and demotion
+    #    is pure overhead.
+    ht = RESULTS.get("host_tier_rehit", {})
+    if ht and ht.get("restore_ttft_us", 0) * 2.0 > ht.get(
+            "recompute_ttft_us", float("inf")):
+        print(f"FATAL: host-tier restore TTFT "
+              f"({ht.get('restore_ttft_us'):.0f}us) is not >= 2x faster "
+              f"than recompute ({ht.get('recompute_ttft_us'):.0f}us) — "
+              f"the T1 tier is not paying for itself", flush=True)
+        raise SystemExit(1)
+    # 7. the staged spill/restore engine must never be slower than the
+    #    per-page blocking baseline it replaced (smoke gets slack for
+    #    CPU timer noise at tiny page counts).
+    sr = RESULTS.get("spill_resume_latency", {})
+    if sr:
+        factor = 1.2 if SMOKE else 1.0
+        if sr.get("staged_us", 0) > factor * sr.get("per_page_us",
+                                                    float("inf")):
+            print(f"FATAL: staged spill/restore "
+                  f"({sr.get('staged_us'):.1f}us) is slower than "
+                  f"{factor:.1f}x the per-page baseline "
+                  f"({sr.get('per_page_us'):.1f}us) — batching the "
+                  f"transfers regressed", flush=True)
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

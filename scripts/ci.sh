@@ -16,10 +16,14 @@ python -m pytest -x -q
 # clobbering the committed full-run BENCH_serve.json trajectory.  The serve
 # set includes the paged-KV rows (paged_capacity, serve_longprompt_*,
 # bursty_admission, paged-vs-dense for gemma3/int8) and the prefix-cache
-# rows (prefix_hit_ttft, prefix_capacity); benchmarks.run exits NONZERO —
+# rows (prefix_hit_ttft, prefix_capacity) and the tiered-KV rows
+# (host_tier_rehit, spill_resume_latency); benchmarks.run exits NONZERO —
 # failing this script — if paged tokens-in-flight capacity ever regresses
 # below dense, if lazy decode growth admits fewer concurrent slots than
 # reserve-at-admission at equal pool size, if a prefix-cache-hit TTFT is
-# not >= 5x faster than the cold admission, or if sharing a system prompt
-# does not admit strictly more slots than exclusive pages at equal pool.
+# not >= 5x faster than the cold admission, if sharing a system prompt
+# does not admit strictly more slots than exclusive pages at equal pool,
+# if restoring an evicted prefix from the host tier is not >= 2x faster
+# than recomputing it, or if the staged spill/restore engine is slower
+# than the per-page baseline it replaced.
 python -m benchmarks.run --smoke --serve

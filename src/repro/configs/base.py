@@ -111,6 +111,27 @@ class ModelConfig:
     # intermediate chunks still run so decode interleaving keeps its
     # latency bound.
     prefill_exact: bool = False
+    # tiered KV memory (serve.kv_tiers; needs prefix_cache): byte budget
+    # of the host-RAM tier (T1) that prefix-cache eviction demotes page
+    # payloads into — a later rehit restores the pages (one staged
+    # host->device transfer + catch-up chunk) instead of recomputing
+    # prefill.  0 disables the tier (eviction drops the bytes).
+    kv_host_tier_bytes: int = 0
+    # optional on-disk snapshot (T2) of the host tier: loaded at batcher
+    # construction if the file exists; ContinuousBatcher.save_tier_
+    # snapshot() flushes the live index + T1 store back to it, so cached
+    # system prompts survive batcher restarts.  "" disables.
+    kv_tier_snapshot: str = ""
+    # recompute-vs-restore policy: spans shorter than this many tokens
+    # are recomputed from tokens instead of staged through host RAM — a
+    # T1 rehit below the knob falls through to plain prefill, and a
+    # preempted sequence below it parks as a recompute record
+    # (re-admission + suppressed-output decode replay) instead of
+    # spilling pages.  Only active in tiered mode (kv_host_tier_bytes >
+    # 0); the default sits at the measured restore/recompute TTFT
+    # crossover of the host_tier_rehit bench (restore wins from roughly
+    # two chunks of tokens upward).
+    tier_restore_min_tokens: int = 32
     # reserve decode pages up-front at admission (plen + max_new) instead
     # of the default lazy growth (prompt pages only; decode pages are
     # allocated on demand, preempting the lowest-priority slot when the

@@ -41,20 +41,42 @@ def main(argv=None):
     ap.add_argument("--prefill-exact", action="store_true",
                     help="recompute prompt K/V at the final chunk so "
                          "chunked prefill is bit-exact vs dense")
+    ap.add_argument("--host-tier-bytes", type=int, default=0,
+                    help="host-RAM tier (T1) byte budget: evicted "
+                         "prefixes demote there and rehits restore "
+                         "instead of recomputing (needs --prefix-cache)")
+    ap.add_argument("--tier-snapshot", default="",
+                    help="on-disk snapshot (T2) path: loaded at start "
+                         "if present, saved at exit — cached prompts "
+                         "survive restarts (needs --host-tier-bytes)")
+    ap.add_argument("--tier-restore-min", type=int, default=-1,
+                    help="recompute-vs-restore crossover in tokens "
+                         "(default: cfg.tier_restore_min_tokens)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
-    if args.page_size or args.prefix_cache or args.prefill_exact:
+    if args.tier_snapshot and not args.host_tier_bytes:
+        ap.error("--tier-snapshot needs the host tier: pass "
+                 "--host-tier-bytes as well")
+    if args.host_tier_bytes and not args.prefix_cache:
+        ap.error("--host-tier-bytes needs --prefix-cache (demotion is "
+                 "keyed by the prefix index)")
+    if (args.page_size or args.prefix_cache or args.prefill_exact
+            or args.host_tier_bytes):
         import dataclasses
         page = args.page_size or cfg.kv_page_size
         if args.prefix_cache and not page:
             ap.error("--prefix-cache needs the paged batcher: pass "
                      "--page-size as well")
-        cfg = dataclasses.replace(cfg, kv_page_size=page,
-                                  prefix_cache=args.prefix_cache,
-                                  prefill_exact=args.prefill_exact)
+        kw = dict(kv_page_size=page, prefix_cache=args.prefix_cache,
+                  prefill_exact=args.prefill_exact,
+                  kv_host_tier_bytes=args.host_tier_bytes,
+                  kv_tier_snapshot=args.tier_snapshot)
+        if args.tier_restore_min >= 0:
+            kw["tier_restore_min_tokens"] = args.tier_restore_min
+        cfg = dataclasses.replace(cfg, **kw)
     params = registry.init(cfg, args.seed)
     rng = np.random.default_rng(args.seed)
 
@@ -108,6 +130,22 @@ def main(argv=None):
             print(f"pages: shared {st['shared_pages']}, "
                   f"cow copies {st['cow_copies']}, "
                   f"pools {st['pools']}")
+        if "tiers" in st:
+            t = st["tiers"]
+            print(f"kv tiers: T1 {t['t1_entries']} entries / "
+                  f"{t['t1_bytes']}B of {t['t1_budget_bytes']}B "
+                  f"({t['t1_evictions']} evicted), "
+                  f"demotions {t['demotions']} "
+                  f"(+{t['demote_skips']} cached), "
+                  f"rehits {t['rehits']} ({t['rehit_tokens']} tokens "
+                  f"restored), recomputes {t['recomputes']}, "
+                  f"recompute-resumes {t['recompute_resumes']}, "
+                  f"transfers {t['staged_gathers']}G/"
+                  f"{t['staged_scatters']}S "
+                  f"({t['d2h_bytes']}B down, {t['h2d_bytes']}B up)")
+        if batcher._tiers is not None and batcher.tier_snapshot:
+            n = batcher.save_tier_snapshot()
+            print(f"kv tiers: snapshot saved to {n}")
     else:
         mode = "dense"
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "

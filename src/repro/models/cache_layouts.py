@@ -138,26 +138,55 @@ class CacheLayout:
         """Index of the page axis in every pool leaf of the group."""
         return 1
 
-    # -- spill / restore (slot preemption) ---------------------------------------------
+    # -- spill / restore (slot preemption, host-tier demote/promote) -------------------
 
-    def spill(self, pools, name: str, pages: Sequence[int]):
-        """Copy the given physical pages (every layer) to host arrays."""
+    def gather_pages(self, pools, name: str, pages: Sequence[int]):
+        """Bulk device-side gather of the given physical pages (every
+        layer, every leaf) in ONE take per pool leaf.  Returns *device*
+        arrays without blocking: callers that want host copies pull them
+        afterwards (``serve.kv_tiers.StagedTransferEngine`` dispatches
+        every group's gather before the first device->host copy blocks,
+        so transfers overlap compute)."""
         idx = jnp.asarray(np.asarray(pages, np.int32))
         ax = self.page_axis(name)
-        return jax.tree.map(lambda a: np.asarray(jnp.take(a, idx, axis=ax)),
+        return jax.tree.map(lambda a: jnp.take(a, idx, axis=ax),
                             pools[name])
+
+    def restore_pages(self, pools, name: str, data, pages: Sequence[int]):
+        """Bulk scatter of page payloads into (possibly different)
+        physical pages — one scatter per pool leaf; returns the updated
+        pools dict.  Payload dtypes must match the pool exactly: a
+        silent cast here would corrupt quantized pages (int8 payloads
+        staged through a float buffer would be truncated, bf16 scale
+        pages widened and re-rounded), so a mismatch raises instead."""
+        ax = self.page_axis(name)
+        sel = (slice(None),) * ax + (np.asarray(pages, np.int32),)
+
+        def put(a, d):
+            d = jnp.asarray(d)
+            if d.dtype != a.dtype:
+                raise TypeError(
+                    f"restore_pages({name!r}): payload dtype {d.dtype} != "
+                    f"pool dtype {a.dtype} — spilled pages must round-trip "
+                    f"bit-identically (int8 pages keep int8, scale pages "
+                    f"keep bf16); refusing the silent cast")
+            return a.at[sel].set(d)
+
+        new = jax.tree.map(put, pools[name], data)
+        out = dict(pools)
+        out[name] = new
+        return out
+
+    def spill(self, pools, name: str, pages: Sequence[int]):
+        """Copy the given physical pages (every layer) to host arrays,
+        preserving each leaf's dtype (int8 pages stay int8, their bf16
+        scale pages stay bf16)."""
+        return jax.tree.map(np.asarray, self.gather_pages(pools, name, pages))
 
     def restore(self, pools, name: str, data, pages: Sequence[int]):
         """Scatter spilled page data back into (possibly different)
         physical pages; returns the updated pools dict."""
-        ax = self.page_axis(name)
-        sel = (slice(None),) * ax + (np.asarray(pages, np.int32),)
-        new = jax.tree.map(
-            lambda a, d: a.at[sel].set(jnp.asarray(d).astype(a.dtype)),
-            pools[name], data)
-        out = dict(pools)
-        out[name] = new
-        return out
+        return self.restore_pages(pools, name, data, pages)
 
     # -- copy-on-write ----------------------------------------------------------------
 

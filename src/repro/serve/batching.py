@@ -77,6 +77,28 @@ to declare itself shareable: flat GQA, MLA latent, and int8+scale
 groups are; gemma3's ring-of-pages local group is not (ring content
 depends on wrap position), so gemma3 keeps exclusive pages.
 
+Tiered KV memory (``cfg.kv_host_tier_bytes``)
+---------------------------------------------
+With the prefix cache enabled, a bounded host-RAM tier
+(``serve.kv_tiers``) sits behind the page pool.  Prefix eviction
+*demotes* the evicted node's pages to the host store (one staged,
+batched device->host gather) instead of dropping their bytes; a later
+prompt that misses the device index but hits the host store *promotes*
+the matched block chain back — pages are allocated, payloads scattered
+in one staged transfer, the blocks re-inserted into the ``PrefixIndex``
+— and the admission then proceeds as an ordinary shared-page hit
+(catch-up chunk only), bit-identical to the cold run.  Preemption
+spill/resume routes through the same ``StagedTransferEngine`` (all
+groups' gathers dispatched before the first blocking copy), and an
+optional on-disk snapshot (``kv_tier_snapshot``) persists the host
+store across batcher restarts so cached system prompts survive
+redeploys.  ``tier_restore_min_tokens`` is the recompute-vs-restore
+policy: spans shorter than the knob recompute from tokens (rehits fall
+through to plain prefill; short preempted sequences park as
+*recompute* records that re-admit and replay their generated tokens
+through suppressed-output decode steps) — below the crossover, prefill
+FLOPs are cheaper than staging pages through host RAM.
+
 Chunked prefill
 ---------------
 Dense admission prefils a full ``n_slots``-row padded batch per pow2
@@ -96,6 +118,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import os
 from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
                     Tuple)
 
@@ -108,6 +131,7 @@ from ..core.stream import Stream, StreamClosed
 from ..models import registry
 from ..models import params as PP
 from ..models.cache_layouts import get_layout
+from .kv_tiers import KVTierManager, StagedTransferEngine
 from .prefix_cache import PageAllocator, PrefixIndex
 from .serve_loop import make_chunk_prefill_step, make_paged_decode_step
 
@@ -205,6 +229,13 @@ class _Admission:
     prefix-cache hit); ``cache_offset`` is the read-only boundary below
     which the slot's pages are shared with the prefix cache and must not
     be rewritten (== the matched token count).
+
+    ``resume`` marks a recompute-mode resume (tiered memory's
+    recompute-from-prompt policy): the final chunk suppresses the
+    first-token push (it was emitted before the preemption), restores
+    the parked decode budget, and arms the suppressed-output decode
+    replay that regenerates the already-emitted tokens' KV through the
+    decode path — bit-identical to the uncontended run.
     """
     req: Request
     slot: int
@@ -213,6 +244,7 @@ class _Admission:
     n_chunks: int
     start: int = 0
     cache_offset: int = 0
+    resume: Optional["_Preempted"] = None
 
 
 @dataclasses.dataclass
@@ -229,6 +261,16 @@ class _Preempted:
     pages.  Resume restores the private pages bit-identically into
     freshly allocated pages, so post-resume tokens exactly match an
     uncontended run.
+
+    ``mode == "recompute"`` (tiered memory, sequences shorter than
+    ``tier_restore_min_tokens``): nothing was spilled — the slot's
+    prompt blocks went to the prefix index at preemption and resume
+    re-admits the original prompt (prefix hits recover surviving
+    blocks) then replays the ``pos - plen`` already-emitted decode
+    steps with output pushes suppressed: greedy decode is
+    deterministic, so the replay rebuilds the generated tokens' KV
+    through the *decode* path — the cache bits, and hence every later
+    token, exactly match the uncontended run.
     """
     req: Request
     pos: int
@@ -238,6 +280,10 @@ class _Preempted:
     counts: Dict[str, int]
     seq: int                     # admission order (preemption tie-break)
     shared: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+    mode: str = "restore"        # "restore" (spilled pages) | "recompute"
+    # replay pushes still owed suppression when the slot was preempted
+    # MID-replay (tokens beyond ``pos`` already reached the consumer).
+    skip: int = 0
 
 
 class ContinuousBatcher:
@@ -259,7 +305,10 @@ class ContinuousBatcher:
                  reserve_decode: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
                  prefix_block: Optional[int] = None,
-                 prefill_exact: Optional[bool] = None):
+                 prefill_exact: Optional[bool] = None,
+                 host_tier_bytes: Optional[int] = None,
+                 tier_snapshot: Optional[str] = None,
+                 tier_restore_min: Optional[int] = None):
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError("batcher demo covers LM families")
         self.cfg, self.params = cfg, params
@@ -280,6 +329,8 @@ class ContinuousBatcher:
         self.prefix_hit_tokens = 0
         self.cow_copies = 0
         self.prefix_evictions = 0
+        # tiered-memory observability (zero when the tier is disabled).
+        self.recompute_resumes = 0
 
         # host mirror: which Request occupies each slot (None = free).
         self._slot_req: List[Optional[Request]] = [None] * n_slots
@@ -348,6 +399,31 @@ class ContinuousBatcher:
                 if self.prefix_cache else None)
             self._admitting: Deque[_Admission] = collections.deque()
             self._preempted: List[_Preempted] = []
+            # Tiered KV memory: ONE staged-transfer engine carries every
+            # device<->host page movement (preemption spill/resume plus
+            # the host tier's demote/promote); the T1 store only exists
+            # with a byte budget AND the prefix cache (demotion is keyed
+            # by the prefix index's token paths).
+            self._xfer = StagedTransferEngine(self.layout)
+            self.tier_restore_min = int(
+                cfg.tier_restore_min_tokens if tier_restore_min is None
+                else tier_restore_min)
+            htb = int(cfg.kv_host_tier_bytes if host_tier_bytes is None
+                      else host_tier_bytes)
+            self.host_tier_bytes = htb if self.prefix_cache else 0
+            self._tiers: Optional[KVTierManager] = (
+                KVTierManager(self.layout, self.page_size,
+                              self.prefix_block, self.host_tier_bytes,
+                              self._xfer)
+                if self.host_tier_bytes > 0 else None)
+            self.tier_snapshot = str(
+                cfg.kv_tier_snapshot if tier_snapshot is None
+                else tier_snapshot) if self._tiers is not None else ""
+            if self.tier_snapshot and os.path.exists(self.tier_snapshot):
+                self._tiers.load(self.tier_snapshot)
+            # decode steps left to replay with output pushes suppressed
+            # (recompute-mode resume re-emits already-delivered tokens).
+            self._replay_skip = [0] * n_slots
             self.pools = PP.init_params(
                 registry.paged_cache_decls(cfg, self.n_pages,
                                            self.page_size))
@@ -370,6 +446,8 @@ class ContinuousBatcher:
         else:
             self.prefix_cache = False
             self._prefix = None
+            self._tiers = None
+            self._xfer = None
             cache_d = registry.cache_decls(cfg, 1, max_seq)
             one = PP.init_params(cache_d)  # zeros (init=zeros decls)
             self.cache = jax.tree.map(
@@ -415,6 +493,10 @@ class ContinuousBatcher:
         s["shared_pages"] = sum(a.shared_pages for a in self._alloc.values())
         s["cow_copies"] = self.cow_copies
         s["prefix_cache"] = self.prefix_cache
+        s["transfers"] = self._xfer.stats()
+        if self._tiers is not None:
+            s["tiers"] = {**self._tiers.stats(),
+                          "recompute_resumes": self.recompute_resumes}
         if self.prefix_cache:
             s["prefix_lookups"] = self.prefix_lookups
             s["prefix_hits"] = self.prefix_hits
@@ -433,12 +515,18 @@ class ContinuousBatcher:
         total = min(len(r.prompt) + r.max_new, self.max_seq)
         return self.layout.blocks_for(group, total, self.max_seq)
 
-    def _admit_pages_needed(self, r: Request, group: str) -> int:
+    def _admit_pages_needed(self, r: Request, group: str,
+                            cover: Optional[int] = None) -> int:
         """Pages reserved at admission: prompt-only under lazy growth,
-        the full worst case under ``reserve_decode``."""
+        the full worst case under ``reserve_decode``.  ``cover`` raises
+        the floor to a token position (recompute-mode resume reserves
+        through ``pos + 1`` so the re-admitted slot can always replay
+        and emit at least one token before it can be preempted again —
+        the same headroom rule the restore path uses)."""
         if self.reserve_decode:
             return self._full_pages_needed(r, group)
-        return self.layout.blocks_for(group, len(r.prompt), self.max_seq)
+        tokens = max(len(r.prompt), cover or 0)
+        return self.layout.blocks_for(group, tokens, self.max_seq)
 
     def _set_table_row(self, group: str, slot: int,
                        pages: Sequence[int]) -> None:
@@ -455,20 +543,108 @@ class ContinuousBatcher:
         pressure.  Cached prefixes are strictly lower-value than any
         live request, so they are freed (decref'd — pages still shared
         by live slots survive via those refs) before admission
-        backpressures or any live slot is preempted."""
+        backpressures or any live slot is preempted.  With the host
+        tier enabled, each evicted node's page payload is DEMOTED to
+        T1 first (staged gather while the pages are still live), so a
+        later rehit restores instead of recomputing."""
         got = self._alloc[name].alloc(n)
         while got is None and self._prefix is not None \
                 and self._prefix.n_nodes:
             evicted = self._prefix.evict_lru()
             if evicted is None:
                 break
-            for gname, pgs in evicted.items():
+            path_toks, pages = evicted
+            if self._tiers is not None:
+                self._tiers.demote(path_toks, pages, self.pools)
+            for gname, pgs in pages.items():
                 self._alloc[gname].free(pgs)
             self.prefix_evictions += 1
             got = self._alloc[name].alloc(n)
         return got
 
-    def _try_admit_paged(self, r: Request, slot: int) -> bool:
+    def _tier_promote(self, prompt: np.ndarray) -> int:
+        """Restore the longest T1-cached block chain the device index is
+        missing for this prompt: allocate pages per group, scatter the
+        host payloads back in one staged transfer, and INSERT the blocks
+        into the ``PrefixIndex`` — the admission's normal match then
+        attaches them exactly like any other cached prefix, so a T1
+        rehit inherits the full shared-page machinery (incref pinning,
+        CoW, catch-up-chunk bit-identity).  Returns tokens promoted.
+
+        Chains shorter than ``tier_restore_min_tokens`` recompute
+        instead (a short prefill is cheaper than staging pages through
+        host RAM).  Allocation pressure during the promote can itself
+        evict blocks of this very prompt out of the index (demoting
+        them to T1); the promote detects the moved anchor and retries
+        against the new tree state."""
+        tiers = self._tiers
+        for _ in range(2):
+            nb = self._prefix.matched_blocks(prompt)
+            chain = tiers.match(prompt, start_block=nb)
+            if not chain:
+                return 0
+            if len(chain) * tiers.block < self.tier_restore_min:
+                tiers.recomputes += 1
+                return 0
+            bpp = tiers.bpp
+            new_pages: Dict[str, List[int]] = {g.name: []
+                                               for g in self.layout.groups}
+            taken = 0
+            for _entry in chain:                 # leading blocks, best effort
+                grabbed: Dict[str, List[int]] = {}
+                ok = True
+                for g in self.layout.groups:
+                    got = self._alloc_evict(g.name, bpp)
+                    if got is None:
+                        ok = False
+                        break
+                    grabbed[g.name] = got
+                if not ok:
+                    for gname, pgs in grabbed.items():
+                        self._alloc[gname].free(pgs)
+                    break
+                for gname in new_pages:
+                    new_pages[gname].extend(grabbed[gname])
+                taken += 1
+            if not taken or taken * tiers.block < self.tier_restore_min:
+                # nothing allocatable, or pool pressure truncated the
+                # chain below the recompute crossover: staging a span
+                # this short through host RAM is slower than prefill.
+                for gname, pgs in new_pages.items():
+                    if pgs:
+                        self._alloc[gname].free(pgs)
+                if taken:
+                    tiers.recomputes += 1
+                return 0
+            if self._prefix.matched_blocks(prompt) != nb:
+                # our own allocation pressure evicted on-path blocks;
+                # hand the pages back and re-anchor (they are in T1 now).
+                for gname, pgs in new_pages.items():
+                    if pgs:
+                        self._alloc[gname].free(pgs)
+                continue
+            self.pools = tiers.restore_chain(self.pools, chain[:taken],
+                                             new_pages)
+            total = (nb + taken) * tiers.block
+            # blocks below nb already exist in the tree — insert ignores
+            # their (placeholder) entries and absorbs only ours.
+            pages_arg = {gname: [-1] * (nb * bpp) + pgs
+                         for gname, pgs in new_pages.items()}
+            absorbed = set(self._prefix.insert(
+                np.asarray(prompt[:total], np.int32), pages_arg))
+            dup = [i for i in range(nb * bpp, (nb + taken) * bpp)
+                   if i not in absorbed]
+            for gname in new_pages:              # defensive: racing insert
+                pgs = [pages_arg[gname][i] for i in dup]
+                if pgs:
+                    self._alloc[gname].free(pgs)
+            tiers.rehits += 1
+            tiers.rehit_tokens += taken * tiers.block
+            return taken * tiers.block
+        return 0
+
+    def _try_admit_paged(self, r: Request, slot: int,
+                         resume: Optional[_Preempted] = None) -> bool:
         """Reserve admission pages + a slot and start chunked prefill.
         Returns False (leaving ``r`` to the caller) when any group's
         pool is dry — all-or-nothing across page groups.
@@ -482,13 +658,24 @@ class ContinuousBatcher:
         boundary is copied (copy-on-write) into the first private page
         when the catch-up prefill — or, under ``reserve_decode``, a
         decode step that will never consult ``_grow_slot`` — is going to
-        write past the match."""
+        write past the match.  With the host tier enabled, T1-cached
+        blocks missing from the index are promoted first, so the match
+        sees them.
+
+        ``resume`` re-admits a recompute-mode preempted request: same
+        path (including prefix hits on its own retired-at-preemption
+        prompt blocks), but the final chunk restores the parked decode
+        budget and arms the suppressed-output replay instead of
+        emitting a first token."""
         plen = len(r.prompt)
         m = 0
         shared: Dict[str, List[int]] = {g.name: [] for g in self.layout.groups}
         if self.prefix_cache:
             self.prefix_lookups += 1
-            m, shared = self._prefix.match(np.asarray(r.prompt, np.int32))
+            prompt_i32 = np.asarray(r.prompt, np.int32)
+            if self._tiers is not None:
+                self._tier_promote(prompt_i32)
+            m, shared = self._prefix.match(prompt_i32)
         n_matched = _ceil_div(m, self.page_size)
         partial = bool(m % self.page_size)
         cow = partial and (m < plen or self.reserve_decode)
@@ -506,7 +693,8 @@ class ContinuousBatcher:
                 self._alloc[name].incref(pgs)
         grabbed: Dict[str, List[int]] = {}
         for g in self.layout.groups:
-            need = self._admit_pages_needed(r, g.name)
+            need = self._admit_pages_needed(
+                r, g.name, cover=(resume.pos + 1) if resume else None)
             if g.shareable:
                 need -= n_attach
             pages = self._alloc_evict(g.name, max(need, 0))
@@ -551,12 +739,15 @@ class ContinuousBatcher:
         # bits.  A fully cached prompt still pays a single chunk.
         start = min(m, plen - 1)
         start -= start % self.chunk
-        self._slot_seq[slot] = self._admit_seq
-        self._admit_seq += 1
+        if resume is None:
+            self._slot_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+        else:                  # keep the original admission order (victim
+            self._slot_seq[slot] = resume.seq      # tie-breaks stay stable)
         self._admitting.append(_Admission(
             req=r, slot=slot, plen=plen, next_chunk=0,
             n_chunks=max(1, _ceil_div(plen - start, self.chunk)),
-            start=start, cache_offset=m))
+            start=start, cache_offset=m, resume=resume))
         return True
 
     def _prefill_step(self) -> None:
@@ -586,6 +777,11 @@ class ContinuousBatcher:
         part = np.asarray(a.req.prompt[base:base + C], np.int32)
         seg[0, :len(part)] = part
         last_in_chunk = (a.plen - 1 - base) if final else (C - 1)
+        # A resume re-admission needs no special budget: pos + remaining
+        # == plen + max_new - 1 at every step (set at admission, kept in
+        # lockstep by decode, re-established by both resume modes), so
+        # installing max_new - 1 again leaves exactly (replay steps +
+        # parked remaining) on the device counter.
         (self.pools, self.last_tok, self.pos, self.remaining, self.active,
          tok0) = fn(
             self.params, self.pools, self.block_tab, self.last_tok,
@@ -599,6 +795,18 @@ class ContinuousBatcher:
         a.next_chunk += 1
         if final:
             self._admitting.popleft()
+            if a.resume is not None:
+                # first token already reached the consumer before the
+                # preemption: arm the suppressed-output replay instead.
+                replay = a.resume.pos - a.plen
+                self._slot_req[a.slot] = a.req
+                self._host_pos[a.slot] = a.plen
+                self._host_last_tok[a.slot] = int(tok0)
+                self._host_remaining[a.slot] = a.resume.remaining + replay
+                self._replay_skip[a.slot] = replay + a.resume.skip
+                self.resumes += 1
+                self.recompute_resumes += 1
+                return
             a.req.out.Push(int(tok0))
             if a.req.max_new > 1 and a.plen < self.max_seq - 1:
                 self._slot_req[a.slot] = a.req
@@ -663,25 +871,52 @@ class ContinuousBatcher:
         there is nothing to spill — the parked record simply keeps the
         slot's refcount on them and resume re-attaches the same physical
         pages.  Freeing them would reclaim no memory anyway unless every
-        other holder also let go."""
+        other holder also let go.
+
+        The spill is ONE staged transfer for all page groups (device
+        gathers dispatched before the first blocking copy) instead of a
+        blocking per-group round-trip; leaf dtypes are preserved, so
+        int8 pages park as int8 with their bf16 scale pages intact.
+
+        Tiered-memory recompute policy: a sequence with fewer than
+        ``tier_restore_min_tokens`` positions materialized is cheaper to
+        re-prefill than to stage through host RAM — nothing is spilled;
+        its prompt blocks retire into the prefix index (where pool
+        pressure may demote them to T1) and resume re-admits + replays.
+        """
         r = self._slot_req[slot]
-        data: Dict[str, Any] = {}
+        pos = self._host_pos[slot]
+        if self._tiers is not None and pos < self.tier_restore_min:
+            self._preempted.append(_Preempted(
+                req=r, pos=pos, last_tok=self._host_last_tok[slot],
+                remaining=self._host_remaining[slot],
+                data={}, counts={}, seq=self._slot_seq[slot],
+                mode="recompute", skip=self._replay_skip[slot]))
+            self._replay_skip[slot] = 0
+            self.active = self.active.at[slot].set(False)
+            self._slot_req[slot] = None
+            self._release_slot(slot, prompt=r.prompt)
+            self.preemptions += 1
+            self.preempted_rids.append(r.rid)
+            return
         counts: Dict[str, int] = {}
         shared: Dict[str, List[int]] = {}
+        priv_by_group: Dict[str, List[int]] = {}
         for g in self.layout.groups:
             pages = self._slot_pages[g.name][slot]
             ns = self._slot_nshared[g.name][slot]
             shared[g.name] = pages[:ns]
-            priv = pages[ns:]
-            counts[g.name] = len(priv)
-            data[g.name] = (self.layout.spill(self.pools, g.name, priv)
-                            if priv else None)
+            priv_by_group[g.name] = pages[ns:]
+            counts[g.name] = len(pages) - ns
+        gathered = self._xfer.gather_host(self.pools, priv_by_group)
+        data = {name: gathered.get(name) for name in priv_by_group}
         self._preempted.append(_Preempted(
-            req=r, pos=self._host_pos[slot],
+            req=r, pos=pos,
             last_tok=self._host_last_tok[slot],
             remaining=self._host_remaining[slot],
             data=data, counts=counts, seq=self._slot_seq[slot],
-            shared=shared))
+            shared=shared, skip=self._replay_skip[slot]))
+        self._replay_skip[slot] = 0
         self.active = self.active.at[slot].set(False)
         self._slot_req[slot] = None
         self._release_slot(slot, keep_shared=True)
@@ -745,10 +980,13 @@ class ContinuousBatcher:
 
     def _try_resume(self) -> int:
         """Restore preempted requests into free slots, highest priority
-        (then oldest) first; all page groups alloc-or-nothing."""
+        (then oldest) first; all page groups alloc-or-nothing.  Restore
+        mode scatters every group's spilled payload in one staged
+        transfer; recompute mode re-admits the original prompt (prefix
+        hits recover whatever blocks survived) and replays."""
         resumed = 0
-        busy = {a.slot for a in self._admitting}
         while self._preempted:
+            busy = {a.slot for a in self._admitting}
             free = [i for i, r in enumerate(self._slot_req)
                     if r is None and i not in busy]
             if not free:
@@ -759,6 +997,14 @@ class ContinuousBatcher:
                                self._preempted[i].seq))
             idx = order[0]
             rec = self._preempted[idx]
+            slot = free[0]
+            if rec.mode == "recompute":
+                self._preempted.pop(idx)
+                if self._try_admit_paged(rec.req, slot, resume=rec):
+                    resumed += 1
+                    continue
+                self._preempted.insert(idx, rec)   # pool dry: park again
+                break
             grabbed: Dict[str, List[int]] = {}
             ok = True
             for g in self.layout.groups:
@@ -781,13 +1027,14 @@ class ContinuousBatcher:
                 for name, pgs in grabbed.items():
                     self._alloc[name].free(pgs)
                 break
-            slot = free[0]
             self._preempted.pop(idx)
+            self.pools = self._xfer.scatter_device(
+                self.pools,
+                {name: rec.data[name] for name in grabbed
+                 if rec.counts[name]},
+                {name: grabbed[name][:rec.counts[name]] for name in grabbed
+                 if rec.counts[name]})
             for name, priv in grabbed.items():
-                n = rec.counts[name]
-                if n:
-                    self.pools = self.layout.restore(
-                        self.pools, name, rec.data[name], priv[:n])
                 pages = rec.shared.get(name, []) + priv
                 self._set_table_row(name, slot, pages)
                 self._slot_pages[name][slot] = list(pages)
@@ -806,9 +1053,29 @@ class ContinuousBatcher:
             self._host_pos[slot] = rec.pos
             self._host_last_tok[slot] = rec.last_tok
             self._host_remaining[slot] = rec.remaining
+            self._replay_skip[slot] = rec.skip
             self.resumes += 1
             resumed += 1
         return resumed
+
+    # -- T2 snapshots -------------------------------------------------------------------
+
+    def save_tier_snapshot(self, path: Optional[str] = None
+                           ) -> Optional[str]:
+        """Persist the host tier to disk (T2): the live device index is
+        flushed through ``demote`` first, so cached prefixes survive a
+        batcher restart — a new batcher constructed with the same
+        ``kv_tier_snapshot`` path serves its first system-prompt hit
+        from the reloaded store with only the catch-up chunk.  Returns
+        the path written, or None when the tier is disabled."""
+        if self._tiers is None:
+            return None
+        p = path or self.tier_snapshot
+        if not p:
+            raise ValueError("no snapshot path: pass one or set "
+                             "cfg.kv_tier_snapshot / tier_snapshot=")
+        self._tiers.save(p, index=self._prefix, pools=self.pools)
+        return p
 
     # -- dense bucketed admission -----------------------------------------------------
 
@@ -976,7 +1243,13 @@ class ContinuousBatcher:
         for i, r in enumerate(self._slot_req):
             if r is None:
                 continue
-            r.out.Push(int(toks[i]))
+            if self.paged and self._replay_skip[i] > 0:
+                # recompute-mode resume replay: this token already
+                # reached the consumer before the preemption — the step
+                # only rebuilds its KV through the decode path.
+                self._replay_skip[i] -= 1
+            else:
+                r.out.Push(int(toks[i]))
             if self.paged:
                 self._host_last_tok[i] = int(toks[i])
                 self._host_pos[i] += 1

@@ -137,9 +137,14 @@ class PrefixIndex:
       caller which of its references transferred to the index (same
       indices for every group).
     * ``evict_lru()`` removes the least-recently-used leaf and returns
-      its pages for the caller to decref — eviction order is
+      its full token path plus its pages for the caller to decref (or
+      demote to the host tier, ``serve.kv_tiers``) — eviction order is
       leaf-first, so a shared interior prefix outlives its divergent
       tails.
+    * ``matched_blocks(prompt)`` / ``walk()`` are the tiered-memory
+      queries: how many *full* blocks of a prompt the tree already
+      holds (no LRU stamping), and an iterator over every node's
+      ``(path_tokens, pages)`` for snapshot flushes.
     """
 
     def __init__(self, groups: Sequence[str], page: int, block: int):
@@ -218,18 +223,49 @@ class PrefixIndex:
             node = child
         return absorbed
 
-    def evict_lru(self) -> Optional[Dict[str, List[int]]]:
-        victim_parent, victim_key, victim = None, None, None
-        stack = [self._root]
+    def matched_blocks(self, prompt: np.ndarray) -> int:
+        """Number of leading FULL blocks of ``prompt`` present in the
+        tree (exact walk only — no partial matching, no LRU stamping).
+        The host tier uses this to find the first block it may need to
+        promote."""
+        toks = np.asarray(prompt)
+        node, b = self._root, 0
+        while (b + 1) * self.block <= len(toks):
+            key = tuple(int(t) for t in toks[b * self.block:
+                                             (b + 1) * self.block])
+            child = node.children.get(key)
+            if child is None:
+                break
+            node, b = child, b + 1
+        return b
+
+    def walk(self):
+        """Yield ``(path_tokens, pages)`` for every node, parents before
+        children — the snapshot flush order (``serve.kv_tiers`` demotes
+        each node under its content-addressed full token path)."""
+        stack = [((), self._root)]
         while stack:
-            node = stack.pop()
+            path, node = stack.pop()
+            for key, child in node.children.items():
+                cpath = path + key
+                yield cpath, child.pages
+                stack.append((cpath, child))
+
+    def evict_lru(self) -> Optional[
+            Tuple[Tuple[int, ...], Dict[str, List[int]]]]:
+        victim_parent, victim_key, victim = None, None, None
+        victim_path: Tuple[int, ...] = ()
+        stack = [((), self._root)]
+        while stack:
+            path, node = stack.pop()
             for key, child in node.children.items():
                 if child.children:
-                    stack.append(child)
+                    stack.append((path + key, child))
                 elif victim is None or child.stamp < victim.stamp:
                     victim_parent, victim_key, victim = node, key, child
+                    victim_path = path + key
         if victim is None:
             return None
         del victim_parent.children[victim_key]
         self.n_nodes -= 1
-        return victim.pages
+        return victim_path, victim.pages

@@ -1,0 +1,441 @@
+"""Tiered KV memory (serve.kv_tiers): the bounded host-RAM store's
+byte budget + LRU, staged transfer-engine dtype preservation (int8
+pages spill as int8 with bf16 scale pages intact, mismatches raise),
+demote-on-eviction -> promote-on-rehit with BIT-identical restored
+pages across every shareable CacheLayout, T2 snapshot save/load across
+a batcher restart (first system-prompt hit pays only the catch-up
+chunk), the recompute-vs-restore policy knob (short rehits recompute;
+short preempted sequences re-admit + replay), T1 eviction never
+stranding a refcounted device page, and tier-off behavior matching the
+seed.
+"""
+
+import dataclasses
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import smoke_variant
+from repro.models import registry
+from repro.models import params as PP
+from repro.models.cache_layouts import get_layout
+from repro.serve.batching import ContinuousBatcher, Request, drain
+from repro.serve.kv_tiers import (HostPageStore, KVTierManager,
+                                  StagedTransferEngine)
+from repro.serve.prefix_cache import PrefixIndex
+from repro.serve.serve_loop import greedy_generate
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    return cfg, registry.init(cfg, 0)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _greedy(cfg, params, prompt, steps, max_seq=64):
+    return list(np.asarray(greedy_generate(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, steps=steps,
+        max_seq=max_seq)[0]))
+
+
+def _serve_seq(bat, prompts, max_news):
+    """Serve requests one after another through a LIVE batcher (the
+    prefix index + host tier accumulate across requests)."""
+    outs = []
+    for i, (p, mn) in enumerate(zip(prompts, max_news)):
+        r = Request(rid=100 + i, prompt=p, max_new=mn)
+        t = threading.Thread(target=lambda r=r: bat.submit(r))
+        t.start()
+        bat.run(bat.retired + 1)
+        t.join()
+        outs.append(drain(r))
+    return outs
+
+
+def _tier_cfg(cfg, page=8, chunk=8, budget=1 << 20, restore_min=0,
+              snapshot="", **kw):
+    return dataclasses.replace(
+        cfg, kv_page_size=page, prefill_chunk=chunk, prefix_cache=True,
+        kv_host_tier_bytes=budget, tier_restore_min_tokens=restore_min,
+        kv_tier_snapshot=snapshot, **kw)
+
+
+def _uncontended(pcfg, params, prompts, max_new, max_seq=64):
+    """Oracle for preemption tests: the same config served with a
+    dense-equivalent pool — no preemption, no eviction — so contended
+    runs must reproduce these streams exactly."""
+    bat = ContinuousBatcher(pcfg, params, n_slots=len(prompts),
+                            max_seq=max_seq)
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    t = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+    t.start()
+    bat.run(len(reqs))
+    t.join()
+    assert bat.preemptions == 0
+    return [drain(r) for r in reqs]
+
+
+# --- host store (T1) unit -------------------------------------------------------------
+
+
+def test_host_store_budget_and_lru():
+    def entry(val, nbytes):
+        return {"kv": {"k": np.full(nbytes // 2, val, np.int8),
+                       "v": np.full(nbytes - nbytes // 2, val, np.int8)}}
+
+    s = HostPageStore(1000)
+    assert s.put((1,), entry(1, 400)) and s.put((2,), entry(2, 400))
+    assert s.nbytes == 800 and len(s) == 2
+    # third entry exceeds the budget: the LRU entry (1,) goes first.
+    assert s.put((3,), entry(3, 400))
+    assert s.nbytes <= 1000 and s.evictions == 1
+    assert s.get((1,)) is None
+    # a get refreshes LRU: (2,) survives the next eviction, (3,) goes.
+    assert s.get((2,)) is not None
+    assert s.put((4,), entry(4, 400))
+    assert s.get((3,)) is None and s.get((2,)) is not None
+    # an entry larger than the whole budget is refused, not half-stored.
+    assert not s.put((5,), entry(5, 2000))
+    assert s.rejected == 1 and s.nbytes <= 1000
+    # re-put of an existing key replaces (no double counting).
+    assert s.put((4,), entry(9, 600))
+    assert s.nbytes <= 1000
+    assert int(s.get((4,))["kv"]["k"][0]) == 9
+
+
+def test_prefix_index_walk_and_matched_blocks():
+    idx = PrefixIndex(["kv"], page=4, block=4)
+    idx.insert(np.arange(12, dtype=np.int32), {"kv": [10, 11, 12]})
+    branch = np.asarray([0, 1, 2, 3, 9, 9, 9, 9], np.int32)
+    idx.insert(branch, {"kv": [20, 21]})
+    assert idx.matched_blocks(np.arange(12, dtype=np.int32)) == 3
+    assert idx.matched_blocks(branch) == 2
+    assert idx.matched_blocks(np.arange(6, dtype=np.int32)) == 1
+    assert idx.matched_blocks(np.asarray([7, 7, 7, 7], np.int32)) == 0
+    walked = dict(idx.walk())
+    assert set(walked) == {(0, 1, 2, 3), (0, 1, 2, 3, 4, 5, 6, 7),
+                           tuple(range(12)), (0, 1, 2, 3, 9, 9, 9, 9)}
+    assert walked[(0, 1, 2, 3)] == {"kv": [10]}
+    assert walked[tuple(range(12))] == {"kv": [12]}
+
+
+# --- staged transfer engine: dtype preservation (the int8 regression) ------------------
+
+
+def test_staged_engine_int8_dtype_roundtrip():
+    """Spilled int8 pages must come back as int8 with their bf16 scale
+    pages intact — a payload staged through the wrong dtype must raise
+    instead of being silently truncated into the quantized pool."""
+    cfg = dataclasses.replace(smoke_variant(configs.get("minitron-4b")),
+                              kv_cache_dtype="int8")
+    layout = get_layout(cfg, 8)
+    pools = PP.init_params(registry.paged_cache_decls(cfg, {"kv": 4}, 8))
+    rng = np.random.default_rng(0)
+    pools = jax.tree.map(
+        lambda a: jnp.asarray(rng.integers(-120, 120, a.shape)
+                              ).astype(a.dtype)
+        if a.dtype == jnp.int8
+        else jnp.asarray(rng.standard_normal(a.shape)).astype(a.dtype),
+        pools)
+    eng = StagedTransferEngine(layout)
+    data = eng.gather_host(pools, {"kv": [1, 3]})
+    dts = {k: np.asarray(v).dtype for k, v in data["kv"].items()}
+    assert dts["k"] == np.int8 and dts["v"] == np.int8
+    assert dts["k_scale"] == jnp.bfloat16 and dts["v_scale"] == jnp.bfloat16
+    zero = jax.tree.map(jnp.zeros_like, pools)
+    back = eng.scatter_device(zero, data, {"kv": [0, 2]})
+    orig = layout.spill(pools, "kv", [1, 3])
+    got = layout.spill(back, "kv", [0, 2])
+    for k in orig:
+        assert np.array_equal(np.asarray(orig[k]), np.asarray(got[k])), k
+    assert eng.d2h_bytes > 0 and eng.h2d_bytes == eng.d2h_bytes
+    # the dtype guard: a float payload must not silently cast into int8.
+    bad = jax.tree.map(lambda a: np.asarray(a, np.float32), data["kv"])
+    with pytest.raises(TypeError, match="dtype"):
+        layout.restore_pages(pools, "kv", bad, [0, 2])
+
+
+def test_snapshot_geometry_mismatch_raises(tmp_path):
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    layout = get_layout(cfg, 8)
+    eng = StagedTransferEngine(layout)
+    m8 = KVTierManager(layout, 8, 8, 1 << 16, eng)
+    m8.store.put((1, 2), {"kv": {"k": np.zeros(4, np.int8)}})
+    p = str(tmp_path / "snap.pkl")
+    m8.save(p)
+    m16 = KVTierManager(get_layout(cfg, 16), 16, 16, 1 << 16,
+                        StagedTransferEngine(layout))
+    with pytest.raises(ValueError, match="geometry"):
+        m16.load(p)
+    # same page/block/groups but a different cache DTYPE: the leaf
+    # signature must reject it at load, not crash at the first rehit.
+    i8cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    mi8 = KVTierManager(get_layout(i8cfg, 8), 8, 8, 1 << 16,
+                        StagedTransferEngine(get_layout(i8cfg, 8)))
+    with pytest.raises(ValueError, match="dtype"):
+        mi8.load(p)
+    assert m8.load(p) == 1          # matching geometry round-trips
+
+
+# --- demote -> rehit: restored pages bit-identical -------------------------------------
+
+
+def _admit_snapshot(bat, P, max_new, rid):
+    """Submit + admit + run the prefill by hand, then snapshot the
+    prompt pages' bits (every group); caller finishes with bat.run."""
+    r = Request(rid=rid, prompt=P, max_new=max_new)
+    t = threading.Thread(target=lambda: bat.submit(r))
+    t.start()
+    while not bat._admitting:
+        bat.admit()
+    while bat._admitting:
+        bat._prefill_step()
+    t.join()
+    n = -(-len(P) // bat.page_size)
+    slot = next(i for i, rr in enumerate(bat._slot_req) if rr is r)
+    snap = {g.name: bat.layout.spill(bat.pools, g.name,
+                                     bat._slot_pages[g.name][slot][:n])
+            for g in bat.layout.groups}
+    return r, snap
+
+
+def test_demote_rehit_restores_bit_identical_pages(model):
+    """The tentpole acceptance: a prefix evicted to the host tier and
+    re-admitted serves from RESTORED pages whose bits equal the cold
+    run's — output tokens identical, catch-up chunk only."""
+    cfg, params = model
+    P = _prompt(cfg, 32, seed=40)                # 4 pages, page-aligned
+    F = _prompt(cfg, 32, seed=41)                # the evictor
+    bat = ContinuousBatcher(_tier_cfg(cfg), params, n_slots=1, max_seq=64,
+                            n_pages=6)
+    r, cold_snap = _admit_snapshot(bat, P, 4, rid=0)
+    bat.run(1)
+    cold = drain(r)
+    assert cold == _greedy(cfg, params, P, 4)
+    # the filler's admission pressure demotes P's blocks into T1.
+    (f_out,) = _serve_seq(bat, [F], [4])
+    assert f_out == _greedy(cfg, params, F, 4)
+    t = bat._tiers.stats()
+    assert t["demotions"] >= 3 and t["t1_entries"] >= 3
+    # rehit: promote restores the chain; the catch-up prefill is ONE
+    # chunk and the restored prompt pages are bit-identical to cold.
+    chunks_before = bat.prefill_chunks
+    r2, hit_snap = _admit_snapshot(bat, P, 4, rid=2)
+    assert bat.prefill_chunks - chunks_before == 1
+    for g in cold_snap:
+        a, b = cold_snap[g], hit_snap[g]
+        assert jax.tree.all(jax.tree.map(
+            lambda x, y: np.array_equal(np.asarray(x), np.asarray(y)),
+            a, b)), g
+    bat.run(bat.retired + 1)
+    hit = drain(r2)
+    assert hit == cold
+    assert bat._tiers.stats()["rehits"] >= 1
+
+
+@pytest.mark.parametrize("arch,kw", [
+    ("minitron-4b", {"sliding_window": 16}),         # windowed flat pages
+    ("deepseek-v2-lite-16b", {}),                    # MLA latent pages
+    ("minitron-4b", {"kv_cache_dtype": "int8"}),     # int8 + scale pages
+])
+def test_demote_rehit_token_identical_across_layouts(arch, kw):
+    """Acceptance: demote -> rehit is bit-identical to cold for every
+    shareable CacheLayout (the int8 case also proves the spill dtype
+    round-trip end-to-end: its restored pages feed real decode reads).
+    The oracle is the batcher's own cold run — chunked prefill's
+    paged-vs-dense argmax near-ties (pre-existing, prompt-dependent)
+    are not what this asserts; the tier's contract is hit == cold."""
+    cfg = dataclasses.replace(smoke_variant(configs.get(arch)), **kw)
+    params = registry.init(cfg, 0)
+    P = _prompt(cfg, 32, seed=42)
+    F = _prompt(cfg, 32, seed=43)
+    bat = ContinuousBatcher(_tier_cfg(cfg), params, n_slots=1, max_seq=64,
+                            n_pages=6)
+    cold, f_out, hit = _serve_seq(bat, [P, F, P], [5, 5, 5])
+    assert hit == cold
+    t = bat._tiers.stats()
+    assert t["demotions"] >= 1 and t["rehits"] >= 1
+
+
+def test_t1_eviction_never_strands_refcounted_pages(model):
+    """T1 invariants under churn: the byte budget is never exceeded,
+    and T1 eviction frees host bytes only — every refcounted device
+    page stays exactly accounted (index holdings == allocator usage)
+    no matter how many demote/evict cycles run."""
+    cfg, params = model
+    # budget fits ~2 block payloads: lots of T1 evictions under churn.
+    one_block = 2 * 2 * 1 * 4 * 8 * 32 * 2     # {k,v} x L x hkv x page x hd x bf16
+    bat = ContinuousBatcher(_tier_cfg(cfg, budget=2 * one_block + 1),
+                            params, n_slots=1, max_seq=64, n_pages=6)
+    prompts = [_prompt(cfg, 32, seed=50 + i) for i in range(4)]
+    outs = _serve_seq(bat, prompts, [4] * 4)
+    for p, o in zip(prompts, outs):
+        assert o == _greedy(cfg, params, p, 4)
+        assert bat._tiers.store.nbytes <= bat._tiers.store.budget
+    t = bat._tiers.stats()
+    assert t["demotions"] > 0 and t["t1_evictions"] > 0
+    assert t["t1_bytes"] <= t["t1_budget_bytes"]
+    # no strand, no leak: the only live references are the index's own.
+    for name, alloc in bat._alloc.items():
+        assert alloc.used_pages == bat._prefix.n_pages
+        assert alloc.used_pages + alloc.free_pages == alloc.n_pages
+        assert alloc.shared_pages == 0
+
+
+# --- T2 snapshots ----------------------------------------------------------------------
+
+
+def test_snapshot_restart_serves_first_hit_from_catchup_chunk(
+        model, tmp_path):
+    """Acceptance: a batcher restarted from a T2 snapshot serves its
+    first system-prompt hit without any prefill beyond the catch-up
+    chunk, and the rebuilt index's refcounts are consistent."""
+    cfg, params = model
+    snap = str(tmp_path / "kv_tier.snap")
+    sysp = _prompt(cfg, 32, seed=60)
+    tcfg = _tier_cfg(cfg, snapshot=snap)
+    bat_a = ContinuousBatcher(tcfg, params, n_slots=2, max_seq=64)
+    (cold,) = _serve_seq(bat_a, [sysp], [5])
+    assert cold == _greedy(cfg, params, sysp, 5)
+    assert bat_a.prefill_chunks == 4                 # ceil(32/8) cold
+    assert bat_a.save_tier_snapshot() == snap        # flushes the index
+    assert bat_a._tiers.stats()["demotions"] >= 4
+
+    # "restart": a fresh batcher, fresh pools, same snapshot path.
+    bat_b = ContinuousBatcher(tcfg, params, n_slots=2, max_seq=64)
+    assert bat_b._tiers.stats()["snapshot_loaded"] >= 4
+    (hit,) = _serve_seq(bat_b, [sysp], [5])
+    assert hit == cold
+    assert bat_b.prefill_chunks == 1                 # catch-up chunk only
+    assert bat_b._tiers.stats()["rehits"] >= 1
+    # refcounts round-tripped: the rebuilt index owns exactly its pages.
+    for name, alloc in bat_b._alloc.items():
+        assert alloc.used_pages == bat_b._prefix.n_pages
+        assert alloc.shared_pages == 0
+
+
+# --- preemption spill through the staged engine ---------------------------------------
+
+
+def test_int8_preempt_spill_dtype_and_bit_identical_resume():
+    """The spill-dtype regression, end to end: preempt an int8-family
+    slot through the tier engine, assert the parked payload kept int8
+    pages + bf16 scale pages, and the resumed request's tokens are
+    bit-identical to its uncontended run."""
+    cfg = dataclasses.replace(smoke_variant(configs.get("minitron-4b")),
+                              kv_cache_dtype="int8")
+    params = registry.init(cfg, 0)
+    prompts = [_prompt(cfg, 6, seed=70 + i) for i in range(3)]
+    pcfg = _tier_cfg(cfg, page=4, chunk=4, restore_min=0)
+    # the oracle is the UNCONTENDED paged run (big pool, no preemption)
+    # with the identical config — resume identity is exactly
+    # "contended == uncontended", independent of chunking numerics.
+    golds = _uncontended(pcfg, params, prompts, 12)
+    # restore_min=0: every preemption takes the staged spill path.
+    bat = ContinuousBatcher(pcfg, params, n_slots=3, max_seq=64, n_pages=8)
+    reqs = [Request(rid=i, prompt=p, max_new=12)
+            for i, p in enumerate(prompts)]
+    spilled_dtypes = []
+    orig_preempt = bat._preempt
+
+    def spy_preempt(slot):
+        orig_preempt(slot)
+        rec = bat._preempted[-1]
+        if rec.data.get("kv") is not None:
+            spilled_dtypes.append(
+                {k: np.asarray(v).dtype for k, v in rec.data["kv"].items()})
+    bat._preempt = spy_preempt
+    t = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+    t.start()
+    bat.run(3)
+    t.join()
+    outs = [drain(r) for r in reqs]
+    assert bat.preemptions > 0 and bat.resumes > 0
+    assert outs == golds
+    assert spilled_dtypes, "no spill carried private pages"
+    for d in spilled_dtypes:
+        assert d["k"] == np.int8 and d["v"] == np.int8
+        assert d["k_scale"] == jnp.bfloat16 and d["v_scale"] == jnp.bfloat16
+    x = bat._xfer.stats()
+    assert x["staged_gathers"] > 0 and x["staged_scatters"] > 0
+
+
+# --- recompute-vs-restore policy -------------------------------------------------------
+
+
+def test_short_rehit_recomputes_instead_of_restoring(model):
+    """A T1-cached span SHORTER than the knob is not promoted: the
+    rehit falls through to plain prefill (recompute), still
+    token-correct."""
+    cfg, params = model
+    P = _prompt(cfg, 32, seed=80)
+    F = _prompt(cfg, 32, seed=81)
+    bat = ContinuousBatcher(_tier_cfg(cfg, restore_min=10_000), params,
+                            n_slots=1, max_seq=64, n_pages=6)
+    cold, f_out, again = _serve_seq(bat, [P, F, P], [4, 4, 4])
+    assert again == cold == _greedy(cfg, params, P, 4)
+    t = bat._tiers.stats()
+    assert t["demotions"] >= 1
+    assert t["recomputes"] >= 1 and t["rehits"] == 0
+
+
+def test_short_preempted_sequences_resume_by_recompute(model):
+    """Below the crossover, preemption parks a recompute record: no
+    pages are spilled — resume re-admits the prompt and replays the
+    emitted tokens through suppressed-output decode steps.  Greedy
+    decode is deterministic, so every stream still exactly matches its
+    uncontended run."""
+    cfg, params = model
+    prompts = [_prompt(cfg, 6, seed=90 + i) for i in range(3)]
+    pcfg = _tier_cfg(cfg, page=4, chunk=4, restore_min=10_000)
+    golds = _uncontended(pcfg, params, prompts, 12)
+    bat = ContinuousBatcher(pcfg, params, n_slots=3, max_seq=64, n_pages=8)
+    reqs = [Request(rid=i, prompt=p, max_new=12)
+            for i, p in enumerate(prompts)]
+    spilled = []
+    orig_preempt = bat._preempt
+
+    def spy_preempt(slot):
+        orig_preempt(slot)
+        spilled.append(any(v is not None
+                           for v in bat._preempted[-1].data.values()))
+    bat._preempt = spy_preempt
+    t = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+    t.start()
+    bat.run(3)
+    t.join()
+    outs = [drain(r) for r in reqs]
+    assert bat.preemptions > 0
+    assert bat.recompute_resumes > 0
+    assert bat.recompute_resumes == bat.resumes   # every resume recomputed
+    assert spilled and not any(spilled)           # no payload ever parked
+    assert outs == golds
+
+
+# --- tier off: seed behavior unchanged ------------------------------------------------
+
+
+def test_tier_disabled_behavior_unchanged(model):
+    """kv_host_tier_bytes=0 (the default): eviction drops bytes exactly
+    as before, stats carry no tier block, and nothing lingers."""
+    cfg, params = model
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefix_cache=True)
+    bat = ContinuousBatcher(pcfg, params, n_slots=1, max_seq=64, n_pages=6)
+    assert bat._tiers is None
+    P = _prompt(cfg, 32, seed=95)
+    F = _prompt(cfg, 32, seed=96)
+    cold, f_out, again = _serve_seq(bat, [P, F, P], [4, 4, 4])
+    assert again == cold == _greedy(cfg, params, P, 4)
+    assert bat.prefix_evictions > 0
+    st = bat.stats()
+    assert "tiers" not in st and "transfers" in st

@@ -137,12 +137,17 @@ def test_prefix_index_insert_dedup_and_lru_eviction():
     branch = np.asarray([0, 1, 2, 3, 9, 9, 9, 9], np.int32)
     idx.insert(branch, {"kv": [7, 8]})
     idx.match(branch)                            # freshen the branch
-    ev = idx.evict_lru()
+    # eviction returns the victim's FULL token path (the host tier's
+    # content address) alongside its pages.
+    toks, ev = idx.evict_lru()
     assert ev == {"kv": [1]}                     # stale leaf [4..7]
-    ev = idx.evict_lru()
+    assert toks == (0, 1, 2, 3, 4, 5, 6, 7)
+    toks, ev = idx.evict_lru()
     assert ev == {"kv": [8]}                     # then branch leaf
-    ev = idx.evict_lru()
+    assert toks == (0, 1, 2, 3, 9, 9, 9, 9)
+    toks, ev = idx.evict_lru()
     assert ev == {"kv": [0]}                     # finally the root block
+    assert toks == (0, 1, 2, 3)
     assert idx.evict_lru() is None and idx.n_nodes == 0
 
 
