@@ -836,6 +836,74 @@ def bench_spill_resume_latency():
     RESULTS["spill_resume_latency"]["staged_us"] = round(us_staged, 1)
 
 
+def bench_deadline_slo():
+    """SLA-aware admission vs FIFO at equal throughput: the same mixed
+    workload — batch-class work submitted FIRST, latency-class arrivals
+    behind it — served twice, once in arrival order and once under
+    schedule="sla" (class rank ahead of arrival).  No deadlines are
+    enforced (deadline_ms=None), so both arms serve every request and
+    total tokens are asserted equal; the only difference is WHEN the
+    latency-class requests complete.  The SLO deadline D is the median
+    completion time of the FIFO arm, and the metric is the fraction of
+    latency-class requests finishing within D.  main() exits nonzero
+    unless SLA scheduling beats FIFO on that hit-rate strictly."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefill_chunk=8)
+    n_batch, n_lat, max_new = (6, 4, 8) if SMOKE else (12, 8, 16)
+    n = n_batch + n_lat
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+               for _ in range(n)]
+
+    def arm(schedule):
+        bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                                queue_depth=n, schedule=schedule)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new=max_new,
+                        klass="batch" if i < n_batch else "latency")
+                for i in range(n)]
+        done = {}
+        t0 = time.perf_counter()
+
+        def consume(r):
+            toks = drain(r, timeout=120.0)
+            done[r.rid] = (time.perf_counter() - t0, len(toks))
+
+        threads = [threading.Thread(target=consume, args=(r,))
+                   for r in reqs]
+        for t in threads:
+            t.start()
+        for r in reqs:
+            bat.submit(r)                     # batch class queued first
+        bat.run(n)
+        for t in threads:
+            t.join()
+        return done
+
+    fifo = arm("fifo")
+    sla = arm("sla")
+    fifo_tokens = sum(k for _, k in fifo.values())
+    sla_tokens = sum(k for _, k in sla.values())
+    assert fifo_tokens == sla_tokens == n * max_new, \
+        "deadline_slo: arms served different token counts"
+    D = float(np.median([t for t, _ in fifo.values()]))
+    lat = range(n_batch, n)
+    fifo_hit = sum(fifo[i][0] <= D for i in lat) / n_lat
+    sla_hit = sum(sla[i][0] <= D for i in lat) / n_lat
+    row("deadline_slo", D * 1e6,
+        f"fifo_hit_rate={fifo_hit:.2f};sla_hit_rate={sla_hit:.2f};"
+        f"deadline_us={D * 1e6:.0f};latency_reqs={n_lat};"
+        f"batch_reqs={n_batch};tokens_equal=1")
+    RESULTS["deadline_slo"]["fifo_hit_rate"] = round(fifo_hit, 3)
+    RESULTS["deadline_slo"]["sla_hit_rate"] = round(sla_hit, 3)
+
+
 # Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
 # workloads (fewer requests/lengths), so they write a separate
 # BENCH_serve_smoke.json — only same-mode snapshots are diffable.
@@ -844,7 +912,7 @@ SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
               "serve_longprompt_dense", "serve_longprompt_paged",
               "bursty_admission", "serve_family_gemma3",
               "serve_family_int8", "prefix_hit_ttft", "prefix_capacity",
-              "host_tier_rehit", "spill_resume_latency")
+              "host_tier_rehit", "spill_resume_latency", "deadline_slo")
 
 
 def main(argv=None) -> None:
@@ -880,6 +948,7 @@ def main(argv=None) -> None:
     bench_prefix_capacity()
     bench_host_tier_rehit()
     bench_spill_resume_latency()
+    bench_deadline_slo()
 
     out_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)),
@@ -975,6 +1044,18 @@ def main(argv=None) -> None:
                   f"({sr.get('per_page_us'):.1f}us) — batching the "
                   f"transfers regressed", flush=True)
             raise SystemExit(1)
+    # 8. at equal throughput (same workload, every request served, token
+    #    equality asserted inside the bench), SLA scheduling must hit
+    #    the latency-class SLO strictly more often than FIFO — otherwise
+    #    class-aware admission is not actually reordering anything.
+    ds = RESULTS.get("deadline_slo", {})
+    if ds and ds.get("sla_hit_rate", 0) <= ds.get("fifo_hit_rate",
+                                                  float("inf")):
+        print(f"FATAL: SLA scheduling did not beat FIFO on the "
+              f"latency-class SLO hit-rate at equal throughput: "
+              f"sla={ds.get('sla_hit_rate')} <= "
+              f"fifo={ds.get('fifo_hit_rate')}", flush=True)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -137,6 +137,23 @@ class ModelConfig:
     # allocated on demand, preempting the lowest-priority slot when the
     # pool runs dry).  Kept as a knob for A/B benchmarking.
     kv_reserve_decode: bool = False
+    # -- resilient serving (serve.resilience) --------------------------------------
+    # admission order: "fifo" (arrival order) or "sla" (SLA class rank,
+    # then deadline, then arrival; batch-class work whose deadline the
+    # projected queue delay already blows is load-shed with a typed
+    # rejection).
+    serve_schedule: str = "fifo"
+    # full-request-queue policy: "block" backpressures the producer
+    # (bounded-FIFO semantics); "reject" sheds with a typed `queue_full`
+    # rejection and submit() returns False.
+    serve_overload: str = "block"
+    # request queue depth (0 = the 2*n_slots default).
+    serve_queue_depth: int = 0
+    # deterministic fault-injection spec ("" = off); grammar
+    # "site:N|N+|N..M|*[@p]" joined with ";" — see
+    # serve.resilience.FaultPlan.  Overridable via the REPRO_FAULTS env
+    # var (and REPRO_FAULT_SEED for the @p probability draws).
+    fault_plan: str = ""
     embed_std: float = 0.02
 
     # -- derived -----------------------------------------------------------------

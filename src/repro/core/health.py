@@ -1,0 +1,73 @@
+"""Shared liveness/health primitives (training AND serving supervisors).
+
+Originally grown inside ``train.fault`` for the checkpoint-restart
+supervisor; the serving supervisor (``serve.resilience``) needs the same
+watchdog machinery, so the runtime-agnostic pieces live here and both
+supervisors import them:
+
+* ``Heartbeat``         — per-worker liveness with a miss threshold.
+* ``StragglerDetector`` — per-step EWMA/variance z-score; flags workers
+  (or a whole step pipeline) running slower than the fleet.
+
+Everything here watches wall-clock timing only — no jax, no hardware
+counters — so the failure paths are fully simulable in CPU tests.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+
+class Heartbeat:
+    """Liveness registry.  Workers call ``beat(worker)``; the monitor
+    thread marks workers dead after ``timeout`` seconds of silence."""
+
+    def __init__(self, workers: Sequence[str], timeout: float = 10.0):
+        self.timeout = timeout
+        self._last: Dict[str, float] = {w: time.monotonic() for w in workers}
+        self._lock = threading.Lock()
+
+    def beat(self, worker: str) -> None:
+        with self._lock:
+            self._last[worker] = time.monotonic()
+
+    def dead(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.monotonic()
+        with self._lock:
+            return [w for w, t in self._last.items()
+                    if now - t > self.timeout]
+
+    def alive(self) -> List[str]:
+        d = set(self.dead())
+        with self._lock:
+            return [w for w in self._last if w not in d]
+
+
+class StragglerDetector:
+    """EWMA step-time tracker.  ``observe`` returns True when the new
+    sample is a straggler (> mean + z·std, with warmup grace)."""
+
+    def __init__(self, alpha: float = 0.2, z: float = 3.0, warmup: int = 5,
+                 min_dt: float = 0.05):
+        self.alpha, self.z, self.warmup = alpha, z, warmup
+        self.min_dt = min_dt      # ignore sub-jitter steps (CPU smoke runs)
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+
+    def observe(self, dt: float) -> bool:
+        self.n += 1
+        if self.n == 1:
+            self.mean = dt
+            return False
+        is_straggler = (self.n > self.warmup
+                        and dt > self.min_dt
+                        and dt > self.mean + self.z * math.sqrt(self.var)
+                        and dt > 1.5 * self.mean)
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler

@@ -14,6 +14,7 @@ from ..configs.base import smoke_variant
 from ..core.dataflow import DataflowContext
 from ..models import registry
 from ..serve.batching import ContinuousBatcher, Request, drain
+from ..serve.resilience import RequestFailed, ServeSupervisor
 
 
 def main(argv=None):
@@ -52,6 +53,27 @@ def main(argv=None):
     ap.add_argument("--tier-restore-min", type=int, default=-1,
                     help="recompute-vs-restore crossover in tokens "
                          "(default: cfg.tier_restore_min_tokens)")
+    ap.add_argument("--schedule", choices=("fifo", "sla"), default=None,
+                    help="admission order: arrival (fifo) or SLA class "
+                         "rank + deadline (sla)")
+    ap.add_argument("--overload", choices=("block", "reject"), default=None,
+                    help="full-queue policy: backpressure the producer "
+                         "(block) or shed with a typed rejection (reject)")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="request queue depth (0 = 2*slots)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault-injection spec, e.g. "
+                         "'step:3;t1_d2h:1+' (see serve.resilience)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under ServeSupervisor: watchdog heartbeat "
+                         "+ journaled crash recovery on fatal step "
+                         "faults (paged mode)")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="per-request deadline in ms (0 = none); "
+                         "expired requests are cancelled, pages freed")
+    ap.add_argument("--klass", choices=("latency", "standard", "batch"),
+                    default="standard",
+                    help="SLA class stamped on every generated request")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -82,7 +104,12 @@ def main(argv=None):
 
     batcher = ContinuousBatcher(cfg, params, n_slots=args.slots,
                                 max_seq=args.max_seq,
-                                n_pages=args.pages or None)
+                                n_pages=args.pages or None,
+                                schedule=args.schedule,
+                                overload=args.overload,
+                                queue_depth=args.queue_depth or None,
+                                faults=args.faults or None)
+    supervisor = ServeSupervisor(batcher) if args.supervise else None
     sysp = rng.integers(0, cfg.vocab_size,
                         min(args.shared_prefix,
                             args.prompt_len)).astype(np.int32)
@@ -90,23 +117,32 @@ def main(argv=None):
                     prompt=np.concatenate([sysp, rng.integers(
                         0, cfg.vocab_size,
                         args.prompt_len - len(sysp)).astype(np.int32)]),
-                    max_new=args.max_new)
+                    max_new=args.max_new, klass=args.klass,
+                    deadline_ms=args.deadline_ms or None)
             for i in range(args.requests)]
 
     t0 = time.time()
     # The paper's Read/Compute/Write dataflow: producer PE feeds the
     # request stream, the batcher PE decodes, consumers drain outputs.
+    run = supervisor.run if supervisor is not None else batcher.run
     with DataflowContext() as df:
         def producer():
             for r in reqs:
-                batcher.requests.Push(r)
+                batcher.submit(r)
         df.function(producer, name="producer")
-        df.function(batcher.run, len(reqs), name="batcher")
+        df.function(run, len(reqs), name="batcher")
     dt = time.time() - t0
 
     total_tokens = 0
+    failed = 0
     for r in reqs:
-        out = drain(r)
+        try:
+            out = drain(r)
+        except RequestFailed as e:
+            failed += 1
+            print(f"req {r.rid}: {type(e).__name__}: {e.reason} "
+                  f"({len(e.tokens)} token(s) streamed)")
+            continue
         total_tokens += len(out)
         print(f"req {r.rid}: {out[:12]}{'...' if len(out) > 12 else ''}")
     if batcher.paged:
@@ -148,6 +184,23 @@ def main(argv=None):
             print(f"kv tiers: snapshot saved to {n}")
     else:
         mode = "dense"
+    st = batcher.stats()
+    if (failed or st["rejections"] or st["expired"] or st["errored"]
+            or st["cancelled"] or st.get("restarts")
+            or st.get("tier_disabled") or args.supervise):
+        rej = ",".join(f"{k}:{v}" for k, v in sorted(
+            st["rejections"].items())) or "none"
+        extra = ""
+        if supervisor is not None:
+            rep = supervisor.report
+            extra = (f", supervisor restarts {rep.restarts} "
+                     f"(recovered {rep.recovered_requests} requests, "
+                     f"{rep.stalls} stalls)")
+        print(f"resilience: rejections [{rej}], expired {st['expired']}, "
+              f"errored {st['errored']}, cancelled {st['cancelled']}, "
+              f"tier faults {st.get('tier_faults', 0)}"
+              f"{' (tier DISABLED)' if st.get('tier_disabled') else ''}"
+              f"{extra}")
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s, {batcher.steps} decode steps, "
           f"{mode}, "

@@ -119,6 +119,8 @@ import collections
 import dataclasses
 import functools
 import os
+import time
+import warnings
 from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
                     Tuple)
 
@@ -131,8 +133,10 @@ from ..core.stream import Stream, StreamClosed
 from ..models import registry
 from ..models import params as PP
 from ..models.cache_layouts import get_layout
-from .kv_tiers import KVTierManager, StagedTransferEngine
+from .kv_tiers import KVTierManager, SnapshotCorruptError, StagedTransferEngine
 from .prefix_cache import PageAllocator, PrefixIndex
+from .resilience import (BatcherFault, FaultPlan, InjectedFault, StallFault,
+                         TerminalEvent, class_rank)
 from .serve_loop import make_chunk_prefill_step, make_paged_decode_step
 
 _MIN_BUCKET = 8            # smallest prefill bucket (pad-to-power-of-two)
@@ -216,6 +220,13 @@ class Request:
     prompt: np.ndarray           # (prompt_len,) int32
     max_new: int
     priority: int = 0            # higher = preempted later
+    # SLA lifecycle (serve.resilience): the class maps onto preemption
+    # rank (latency > standard > batch) and — with schedule="sla" —
+    # admission order; ``deadline_ms`` is wall time from submit() after
+    # which the request is expired (queued) or cancelled (in flight).
+    klass: str = "standard"      # "latency" | "standard" | "batch"
+    deadline_ms: Optional[float] = None
+    submitted_at: float = 0.0    # stamped by submit() / first pop
     out: Stream = dataclasses.field(
         default_factory=lambda: Stream(depth=4096, name="resp"))
 
@@ -308,13 +319,55 @@ class ContinuousBatcher:
                  prefill_exact: Optional[bool] = None,
                  host_tier_bytes: Optional[int] = None,
                  tier_snapshot: Optional[str] = None,
-                 tier_restore_min: Optional[int] = None):
+                 tier_restore_min: Optional[int] = None,
+                 schedule: Optional[str] = None,
+                 overload: Optional[str] = None,
+                 queue_depth: Optional[int] = None,
+                 faults=None,
+                 clock: Optional[Callable[[], float]] = None,
+                 transfer_retries: int = 2,
+                 tier_fault_limit: int = 3):
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError("batcher demo covers LM families")
         self.cfg, self.params = cfg, params
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.requests: Stream = Stream(depth=2 * n_slots, name="requests")
+        # Resilience layer (serve.resilience): deterministic fault plan,
+        # SLA scheduling knobs, explicit bounded-queue overload policy.
+        self._fault: FaultPlan = FaultPlan.resolve(faults, cfg.fault_plan)
+        self.schedule = str(schedule or cfg.serve_schedule)
+        if self.schedule not in ("fifo", "sla"):
+            raise ValueError(f"schedule must be fifo|sla, got "
+                             f"{self.schedule!r}")
+        self.overload = str(overload or cfg.serve_overload)
+        if self.overload not in ("block", "reject"):
+            raise ValueError(f"overload must be block|reject, got "
+                             f"{self.overload!r}")
+        qd = int(cfg.serve_queue_depth if queue_depth is None
+                 else queue_depth)
+        self._clock = clock or time.monotonic
+        self.requests: Stream = Stream(depth=qd or 2 * n_slots,
+                                       name="requests")
+        # lifecycle counters (stats()); ``rejections`` is keyed by the
+        # typed rejection reason a consumer sees in its RequestRejected.
+        self.rejections: Dict[str, int] = {}
+        self.expired = 0
+        self.errored = 0
+        self.cancelled = 0
+        self.tier_faults = 0
+        self.tier_disabled = False
+        self.restarts = 0
+        self.snapshot_cold_start = False
+        self.transfer_retries = int(transfer_retries)
+        self.tier_fault_limit = int(tier_fault_limit)
+        self._ewma_step_s = 0.0      # smoothed decode-step wall time
+        # supervisor wiring (ServeSupervisor sets these).
+        self._heartbeat = None
+        self._supervised = False
+        self._stalled = False
+        # any request in the system carrying a deadline? (keeps the
+        # per-step expiry sweep off the hot path when nobody uses them)
+        self._deadlines_live = False
         self.steps = 0
         self.retired = 0
         self.prefill_compiles = 0
@@ -404,7 +457,8 @@ class ContinuousBatcher:
             # the host tier's demote/promote); the T1 store only exists
             # with a byte budget AND the prefix cache (demotion is keyed
             # by the prefix index's token paths).
-            self._xfer = StagedTransferEngine(self.layout)
+            self._xfer = StagedTransferEngine(self.layout,
+                                              faults=self._fault)
             self.tier_restore_min = int(
                 cfg.tier_restore_min_tokens if tier_restore_min is None
                 else tier_restore_min)
@@ -420,7 +474,16 @@ class ContinuousBatcher:
                 cfg.kv_tier_snapshot if tier_snapshot is None
                 else tier_snapshot) if self._tiers is not None else ""
             if self.tier_snapshot and os.path.exists(self.tier_snapshot):
-                self._tiers.load(self.tier_snapshot)
+                try:
+                    self._tiers.load(self.tier_snapshot)
+                except SnapshotCorruptError as e:
+                    # storage rot is an availability event, not a config
+                    # error: log it and serve cold.  (A geometry
+                    # mismatch — ValueError — still raises: the snapshot
+                    # is intact but belongs to a different layout.)
+                    warnings.warn(f"kv tier snapshot unusable, serving "
+                                  f"from cold start: {e}")
+                    self.snapshot_cold_start = True
             # decode steps left to replay with output pushes suppressed
             # (recompute-mode resume re-emits already-delivered tokens).
             self._replay_skip = [0] * n_slots
@@ -459,15 +522,50 @@ class ContinuousBatcher:
 
     def _next_request(self) -> Optional[Request]:
         if self._pending:
-            return self._pending.popleft()
-        return self.requests.TryPop()
+            r = self._pending.popleft()
+        else:
+            r = self.requests.TryPop()
+        if r is not None:
+            if r.submitted_at == 0.0:      # direct Push (bypassed submit)
+                r.submitted_at = self._clock()
+            if r.deadline_ms is not None:
+                self._deadlines_live = True
+        return r
 
-    def _reject(self, r: Request) -> None:
-        """Unservable request (bypassed submit() validation, or needs
-        more pages than the whole pool): close its stream so its consumer
-        ends instead of raising inside the batcher PE."""
+    def _fail_request(self, r: Request, event: TerminalEvent) -> None:
+        """Terminate a request with a typed in-band event: the event is
+        pushed into its output stream BEFORE the close, so ``drain()``
+        re-raises the original cause instead of timing out.  A full or
+        already-closed stream degrades to close-only (the consumer still
+        unblocks; it just sees a short result)."""
+        try:
+            r.out.Push(event, timeout=1.0)
+        except (TimeoutError, StreamClosed):
+            pass
         r.out.close()
+        if event.kind == "rejected":
+            self.rejections[event.reason] = \
+                self.rejections.get(event.reason, 0) + 1
+        elif event.kind == "expired":
+            self.expired += 1
+        elif event.kind == "errored":
+            self.errored += 1
+        else:
+            self.cancelled += 1
+
+    def _reject(self, r: Request, reason: str = "unservable") -> None:
+        """Unservable request (bypassed submit() validation, or needs
+        more pages than the whole pool): typed Rejected event + close so
+        its consumer ends with the reason instead of raising inside the
+        batcher PE."""
+        self._fail_request(r, TerminalEvent.rejected(r.rid, reason))
         self.retired += 1
+
+    def _expiry_left_ms(self, r: Request) -> float:
+        """Milliseconds of deadline budget left (+inf when none)."""
+        if r.deadline_ms is None:
+            return float("inf")
+        return r.deadline_ms - (self._clock() - r.submitted_at) * 1e3
 
     def total_used_pages(self) -> int:
         return sum(a.used_pages for a in self._alloc.values())
@@ -484,9 +582,16 @@ class ContinuousBatcher:
             "preemptions": self.preemptions, "resumes": self.resumes,
             "prefill_chunks": self.prefill_chunks,
             "peak_pages": self.peak_pages,
+            "rejections": dict(self.rejections),
+            "expired": self.expired, "errored": self.errored,
+            "cancelled": self.cancelled,
         }
         if not self.paged:
             return s
+        s["tier_faults"] = self.tier_faults
+        s["tier_disabled"] = self.tier_disabled
+        s["restarts"] = self.restarts
+        s["snapshot_cold_start"] = self.snapshot_cold_start
         s["pools"] = {name: {"free": a.free_pages, "used": a.used_pages,
                              "shared": a.shared_pages}
                       for name, a in self._alloc.items()}
@@ -538,6 +643,36 @@ class ContinuousBatcher:
     def _note_peak(self) -> None:
         self.peak_pages = max(self.peak_pages, self.total_used_pages())
 
+    def _tier_op(self, what: str, fn: Callable[[], Any],
+                 backoff: float = 0.005) -> Tuple[bool, Any]:
+        """Run a tier transfer with capped-backoff retries — rung 1 of
+        the degradation ladder.  Returns ``(ok, result)``; on final
+        failure the caller falls through to its recompute path (rung 2),
+        and after ``tier_fault_limit`` failed operations the host tier
+        is disabled outright (rung 3, tier-off) — the batcher keeps
+        serving, just without T1.  Only ``RuntimeError`` (which includes
+        ``InjectedFault``) is retried: anything else is a genuine bug
+        and propagates."""
+        err: Optional[BaseException] = None
+        for attempt in range(self.transfer_retries + 1):
+            if attempt:
+                time.sleep(min(backoff * (2 ** (attempt - 1)), 0.05))
+            try:
+                return True, fn()
+            except RuntimeError as e:
+                err = e
+        self.tier_faults += 1
+        warnings.warn(f"tier {what} failed after "
+                      f"{self.transfer_retries + 1} attempts: {err}")
+        if (self.tier_faults >= self.tier_fault_limit
+                and self._tiers is not None):
+            self._tiers = None
+            self.tier_disabled = True
+            warnings.warn(f"host KV tier disabled after "
+                          f"{self.tier_faults} transfer faults "
+                          f"(degraded to recompute-only)")
+        return False, None
+
     def _alloc_evict(self, name: str, n: int) -> Optional[List[int]]:
         """Alloc ``n`` pages, evicting LRU cached prefixes under
         pressure.  Cached prefixes are strictly lower-value than any
@@ -547,6 +682,11 @@ class ContinuousBatcher:
         tier enabled, each evicted node's page payload is DEMOTED to
         T1 first (staged gather while the pages are still live), so a
         later rehit restores instead of recomputing."""
+        if self._fault.fire("alloc"):
+            # simulated pool exhaustion: the caller takes its normal
+            # dry-pool path (backpressure / preemption) — allocator
+            # invariants must survive it (chaos tests check).
+            return None
         got = self._alloc[name].alloc(n)
         while got is None and self._prefix is not None \
                 and self._prefix.n_nodes:
@@ -555,7 +695,10 @@ class ContinuousBatcher:
                 break
             path_toks, pages = evicted
             if self._tiers is not None:
-                self._tiers.demote(path_toks, pages, self.pools)
+                # demote failure just loses the T1 copy — the eviction
+                # itself proceeds (a rehit will recompute).
+                self._tier_op("demote", lambda: self._tiers.demote(
+                    path_toks, pages, self.pools))
             for gname, pgs in pages.items():
                 self._alloc[gname].free(pgs)
             self.prefix_evictions += 1
@@ -623,8 +766,18 @@ class ContinuousBatcher:
                     if pgs:
                         self._alloc[gname].free(pgs)
                 continue
-            self.pools = tiers.restore_chain(self.pools, chain[:taken],
-                                             new_pages)
+            ok, pools = self._tier_op(
+                "promote", lambda: tiers.restore_chain(
+                    self.pools, chain[:taken], new_pages))
+            if not ok:
+                # promotion failed: hand the pages back and recompute
+                # (rung 2) — the prompt prefills from tokens instead.
+                for gname, pgs in new_pages.items():
+                    if pgs:
+                        self._alloc[gname].free(pgs)
+                tiers.recomputes += 1
+                return 0
+            self.pools = pools
             total = (nb + taken) * tiers.block
             # blocks below nb already exist in the tree — insert ignores
             # their (placeholder) entries and absorbs only ours.
@@ -764,6 +917,24 @@ class ContinuousBatcher:
         latency bound; exactness costs up to one extra prefill of
         FLOPs)."""
         a = self._admitting[0]
+        if self._deadlines_live and self._expiry_left_ms(a.req) <= 0:
+            self._admitting.popleft()
+            self._fail_request(a.req, TerminalEvent.expired(
+                a.req.rid, "deadline passed during prefill"))
+            self._release_slot(a.slot)
+            self.retired += 1
+            return
+        try:
+            # injected chunk fault, checked BEFORE the jit call touches
+            # the donated pools: only this request dies (typed Errored
+            # event); every other slot keeps decoding untouched.
+            self._fault.check("chunk")
+        except InjectedFault as e:
+            self._admitting.popleft()
+            self._fail_request(a.req, TerminalEvent.errored(a.req.rid, e))
+            self._release_slot(a.slot)
+            self.retired += 1
+            return
         C, c = self.chunk, a.next_chunk
         final = c == a.n_chunks - 1
         base = a.start + c * C
@@ -782,15 +953,21 @@ class ContinuousBatcher:
         # lockstep by decode, re-established by both resume modes), so
         # installing max_new - 1 again leaves exactly (replay steps +
         # parked remaining) on the device counter.
-        (self.pools, self.last_tok, self.pos, self.remaining, self.active,
-         tok0) = fn(
-            self.params, self.pools, self.block_tab, self.last_tok,
-            self.pos, self.remaining, self.active, jnp.asarray(seg),
-            jnp.full((1,), base, jnp.int32),
-            jnp.full((1,), last_in_chunk, jnp.int32),
-            jnp.int32(a.slot), jnp.asarray(final),
-            jnp.int32(a.plen), jnp.int32(a.req.max_new),
-            jnp.int32(a.cache_offset))
+        try:
+            (self.pools, self.last_tok, self.pos, self.remaining,
+             self.active, tok0) = fn(
+                self.params, self.pools, self.block_tab, self.last_tok,
+                self.pos, self.remaining, self.active, jnp.asarray(seg),
+                jnp.full((1,), base, jnp.int32),
+                jnp.full((1,), last_in_chunk, jnp.int32),
+                jnp.int32(a.slot), jnp.asarray(final),
+                jnp.int32(a.plen), jnp.int32(a.req.max_new),
+                jnp.int32(a.cache_offset))
+        except Exception as e:
+            # a genuine failure inside the jitted prefill may have
+            # consumed the donated pools — fatal; the supervisor owns
+            # the rebuild.
+            raise BatcherFault(e) from e
         self.prefill_chunks += 1
         a.next_chunk += 1
         if final:
@@ -857,11 +1034,15 @@ class ContinuousBatcher:
     # -- lazy decode growth + preemption ------------------------------------------------
 
     def _pick_victim(self) -> Optional[int]:
-        """Lowest-priority decoding slot (ties: most recently admitted)."""
+        """Lowest-ranked decoding slot: SLA class first (batch parks
+        before standard before latency), then the explicit priority knob,
+        ties broken toward the most recently admitted.  Defaults (all
+        "standard", priority 0) reduce to the original policy."""
         cands = [i for i, r in enumerate(self._slot_req) if r is not None]
         if not cands:
             return None
-        return min(cands, key=lambda i: (self._slot_req[i].priority,
+        return min(cands, key=lambda i: (class_rank(self._slot_req[i].klass),
+                                         self._slot_req[i].priority,
                                          -self._slot_seq[i]))
 
     def _preempt(self, slot: int) -> None:
@@ -886,40 +1067,47 @@ class ContinuousBatcher:
         """
         r = self._slot_req[slot]
         pos = self._host_pos[slot]
-        if self._tiers is not None and pos < self.tier_restore_min:
-            self._preempted.append(_Preempted(
-                req=r, pos=pos, last_tok=self._host_last_tok[slot],
-                remaining=self._host_remaining[slot],
-                data={}, counts={}, seq=self._slot_seq[slot],
-                mode="recompute", skip=self._replay_skip[slot]))
-            self._replay_skip[slot] = 0
-            self.active = self.active.at[slot].set(False)
-            self._slot_req[slot] = None
-            self._release_slot(slot, prompt=r.prompt)
-            self.preemptions += 1
-            self.preempted_rids.append(r.rid)
-            return
-        counts: Dict[str, int] = {}
-        shared: Dict[str, List[int]] = {}
-        priv_by_group: Dict[str, List[int]] = {}
-        for g in self.layout.groups:
-            pages = self._slot_pages[g.name][slot]
-            ns = self._slot_nshared[g.name][slot]
-            shared[g.name] = pages[:ns]
-            priv_by_group[g.name] = pages[ns:]
-            counts[g.name] = len(pages) - ns
-        gathered = self._xfer.gather_host(self.pools, priv_by_group)
-        data = {name: gathered.get(name) for name in priv_by_group}
+        recompute = self._tiers is not None and pos < self.tier_restore_min
+        if not recompute:
+            counts: Dict[str, int] = {}
+            shared: Dict[str, List[int]] = {}
+            priv_by_group: Dict[str, List[int]] = {}
+            for g in self.layout.groups:
+                pages = self._slot_pages[g.name][slot]
+                ns = self._slot_nshared[g.name][slot]
+                shared[g.name] = pages[:ns]
+                priv_by_group[g.name] = pages[ns:]
+                counts[g.name] = len(pages) - ns
+            ok, gathered = self._tier_op(
+                "spill", lambda: self._xfer.gather_host(self.pools,
+                                                        priv_by_group))
+            if ok:
+                data = {name: gathered.get(name) for name in priv_by_group}
+                self._preempted.append(_Preempted(
+                    req=r, pos=pos,
+                    last_tok=self._host_last_tok[slot],
+                    remaining=self._host_remaining[slot],
+                    data=data, counts=counts, seq=self._slot_seq[slot],
+                    shared=shared, skip=self._replay_skip[slot]))
+                self._replay_skip[slot] = 0
+                self.active = self.active.at[slot].set(False)
+                self._slot_req[slot] = None
+                self._release_slot(slot, keep_shared=True)
+                self.preemptions += 1
+                self.preempted_rids.append(r.rid)
+                return
+            # spill failed (rung 2): park as a recompute record instead —
+            # greedy replay is deterministic, so the resumed output is
+            # still bit-identical; the spilled bytes were never needed.
         self._preempted.append(_Preempted(
-            req=r, pos=pos,
-            last_tok=self._host_last_tok[slot],
+            req=r, pos=pos, last_tok=self._host_last_tok[slot],
             remaining=self._host_remaining[slot],
-            data=data, counts=counts, seq=self._slot_seq[slot],
-            shared=shared, skip=self._replay_skip[slot]))
+            data={}, counts={}, seq=self._slot_seq[slot],
+            mode="recompute", skip=self._replay_skip[slot]))
         self._replay_skip[slot] = 0
         self.active = self.active.at[slot].set(False)
         self._slot_req[slot] = None
-        self._release_slot(slot, keep_shared=True)
+        self._release_slot(slot, prompt=r.prompt)
         self.preemptions += 1
         self.preempted_rids.append(r.rid)
 
@@ -993,11 +1181,23 @@ class ContinuousBatcher:
                 break
             order = sorted(
                 range(len(self._preempted)),
-                key=lambda i: (-self._preempted[i].req.priority,
+                key=lambda i: (-class_rank(self._preempted[i].req.klass),
+                               -self._preempted[i].req.priority,
                                self._preempted[i].seq))
             idx = order[0]
             rec = self._preempted[idx]
             slot = free[0]
+            if self._expiry_left_ms(rec.req) <= 0:
+                # expired while parked: free its held shared refs and
+                # terminate the consumer — no slot spent on a dead SLA.
+                self._preempted.pop(idx)
+                for name, pgs in rec.shared.items():
+                    if pgs:
+                        self._alloc[name].free(pgs)
+                self._fail_request(rec.req, TerminalEvent.expired(
+                    rec.req.rid, "deadline passed while preempted"))
+                self.retired += 1
+                continue
             if rec.mode == "recompute":
                 self._preempted.pop(idx)
                 if self._try_admit_paged(rec.req, slot, resume=rec):
@@ -1028,12 +1228,29 @@ class ContinuousBatcher:
                     self._alloc[name].free(pgs)
                 break
             self._preempted.pop(idx)
-            self.pools = self._xfer.scatter_device(
-                self.pools,
-                {name: rec.data[name] for name in grabbed
-                 if rec.counts[name]},
-                {name: grabbed[name][:rec.counts[name]] for name in grabbed
-                 if rec.counts[name]})
+            ok, pools = self._tier_op(
+                "restore", lambda: self._xfer.scatter_device(
+                    self.pools,
+                    {name: rec.data[name] for name in grabbed
+                     if rec.counts[name]},
+                    {name: grabbed[name][:rec.counts[name]]
+                     for name in grabbed if rec.counts[name]}))
+            if not ok:
+                # restore failed: drop the spilled payload and convert
+                # to a recompute record (rung 2) — deterministic replay
+                # regenerates the same KV from tokens.  Our refs on the
+                # shared prefix pages return to the index's own holders,
+                # and the re-admission's prefix match re-attaches them.
+                for name, pgs in grabbed.items():
+                    self._alloc[name].free(pgs)
+                for name, pgs in rec.shared.items():
+                    if pgs:
+                        self._alloc[name].free(pgs)
+                rec.mode = "recompute"
+                rec.data, rec.counts, rec.shared = {}, {}, {}
+                self._preempted.insert(idx, rec)
+                continue
+            self.pools = pools
             for name, priv in grabbed.items():
                 pages = rec.shared.get(name, []) + priv
                 self._set_table_row(name, slot, pages)
@@ -1057,6 +1274,131 @@ class ContinuousBatcher:
             self.resumes += 1
             resumed += 1
         return resumed
+
+    # -- fatal faults: shutdown vs crash recovery --------------------------------------
+
+    def fail_inflight(self, cause: BaseException) -> int:
+        """Terminate every request the batcher still owes an outcome —
+        active slots, mid-admission, parked, queued — with typed events
+        (Errored for work in flight, Cancelled for work never admitted)
+        so no consumer waits out a drain timeout.  Called on a fatal
+        fault once recovery is off the table; deliberately touches NO
+        device state (the fault may have consumed the donated buffers).
+        Returns the number of requests terminated."""
+        n = 0
+        for i, r in enumerate(self._slot_req):
+            if r is not None:
+                self._fail_request(r, TerminalEvent.errored(r.rid, cause))
+                self._slot_req[i] = None
+                self.retired += 1
+                n += 1
+        if self.paged:
+            while self._admitting:
+                a = self._admitting.popleft()
+                self._fail_request(a.req,
+                                   TerminalEvent.errored(a.req.rid, cause))
+                self.retired += 1
+                n += 1
+            while self._preempted:
+                rec = self._preempted.pop()
+                self._fail_request(rec.req,
+                                   TerminalEvent.errored(rec.req.rid, cause))
+                self.retired += 1
+                n += 1
+        while True:
+            r = self._pending.popleft() if self._pending \
+                else self.requests.TryPop()
+            if r is None:
+                break
+            self._fail_request(r, TerminalEvent.cancelled(
+                r.rid, "batcher shut down before admission"))
+            self.retired += 1
+            n += 1
+        return n
+
+    def _rebuild_paged_state(self) -> None:
+        """Fresh device pools + allocators + block tables + slot state
+        after a fatal step fault (the donated buffers are gone).  The
+        host tier (``self._tiers``) survives — its payloads are host
+        copies gathered before the fault and still exact; the prefix
+        index is rebuilt empty (its pages died with the pools)."""
+        i32 = jnp.int32
+        n_slots = self.n_slots
+        self._alloc = {name: PageAllocator(n)
+                       for name, n in self.n_pages.items()}
+        self._slot_pages = {name: [[] for _ in range(n_slots)]
+                            for name in self.n_pages}
+        self._slot_nshared = {name: [0] * n_slots for name in self.n_pages}
+        if self._prefix is not None:
+            self._prefix = PrefixIndex(
+                [g.name for g in self.layout.groups],
+                self.page_size, self.prefix_block)
+        self.pools = PP.init_params(
+            registry.paged_cache_decls(self.cfg, self.n_pages,
+                                       self.page_size))
+        self.block_tab = {
+            name: jnp.full((n_slots, self.n_blocks[name]),
+                           self.n_pages[name], i32)
+            for name in self.n_pages}
+        self.last_tok = jnp.zeros((n_slots,), i32)
+        self.pos = jnp.zeros((n_slots,), i32)
+        self.remaining = jnp.zeros((n_slots,), i32)
+        self.active = jnp.zeros((n_slots,), bool)
+        self._host_pos = [0] * n_slots
+        self._host_last_tok = [0] * n_slots
+        self._host_remaining = [0] * n_slots
+        self._slot_seq = [0] * n_slots
+        self._replay_skip = [0] * n_slots
+        self._admitting.clear()
+        self._preempted = []
+
+    def recover(self) -> int:
+        """Crash recovery after a fatal step fault (``ServeSupervisor``
+        calls this between run() attempts): journal every in-flight
+        request as a recompute-mode record, rebuild the device pools
+        from scratch, and resubmit the journal.  Greedy decode is
+        deterministic and recompute-mode resume replays the
+        already-emitted tokens with output pushes suppressed, so every
+        surviving request's token stream is bit-identical to a
+        fault-free run.  Returns the number of requests resubmitted."""
+        if not self.paged:
+            raise RuntimeError("recover() requires the paged batcher; "
+                               "the dense path has no journaled replay")
+        journal: List[_Preempted] = []
+        for slot, r in enumerate(self._slot_req):
+            if r is None:
+                continue
+            journal.append(_Preempted(
+                req=r, pos=self._host_pos[slot],
+                last_tok=self._host_last_tok[slot],
+                remaining=self._host_remaining[slot],
+                data={}, counts={}, seq=self._slot_seq[slot],
+                mode="recompute", skip=self._replay_skip[slot]))
+            self._slot_req[slot] = None
+        # mid-admission: a resume re-journals its (recompute) record —
+        # it still owes the same suppressed replay; a fresh admission
+        # emitted nothing yet and simply re-queues, order preserved.
+        fresh: List[Request] = []
+        while self._admitting:
+            a = self._admitting.popleft()
+            if a.resume is not None:
+                journal.append(a.resume)
+            else:
+                fresh.append(a.req)
+        # parked records: spilled payloads died with nothing? No — they
+        # are host copies and technically still valid, but their shared
+        # prefix pages referenced the dead pools, so convert everything
+        # to recompute: deterministic replay is always correct.
+        for rec in self._preempted:
+            rec.mode = "recompute"
+            rec.data, rec.counts, rec.shared = {}, {}, {}
+            journal.append(rec)
+        self._rebuild_paged_state()
+        self._preempted = journal
+        self._pending.extendleft(reversed(fresh))
+        self.restarts += 1
+        self._stalled = False
+        return len(journal) + len(fresh)
 
     # -- T2 snapshots -------------------------------------------------------------------
 
@@ -1149,28 +1491,94 @@ class ContinuousBatcher:
 
     # -- scheduling ---------------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        """Validate + enqueue.  Degenerate requests are rejected HERE, in
-        the producer's thread, with a clear error — instead of burning a
-        slot and pages on an admission whose slot is immediately
-        non-alive (or one bad request killing the batcher PE mid-flight
-        with other requests in its slots):
+    def submit(self, req: Request) -> bool:
+        """Validate + enqueue; returns True iff the request entered the
+        queue.  Degenerate requests are rejected HERE, in the producer's
+        thread, with a clear error — instead of burning a slot and pages
+        on an admission whose slot is immediately non-alive (or one bad
+        request killing the batcher PE mid-flight with other requests in
+        its slots):
 
         * ``prompt >= max_seq - 1``: prefill would leave no room to
           decode even one token past the first.
         * ``max_new <= 1``: the request retires at admission (its single
           token comes from the prefill itself) — a full prefill for a
           dead slot.
-        """
+
+        A raised ``ValueError`` also pushes the typed Rejected event +
+        close into ``req.out``, so a consumer thread that never sees the
+        producer's exception still terminates.
+
+        Overload policy (``overload=`` / ``cfg.serve_overload``): with a
+        full request queue, ``"block"`` (default) backpressures the
+        producer — the hlslib bounded-FIFO behavior — while ``"reject"``
+        sheds the request instead: a typed ``queue_full`` rejection, no
+        blocking, return False.  Shed requests never entered the
+        pipeline, so they do NOT count toward ``retired`` (run(total)
+        totals must count only requests the batcher owes a terminal
+        outcome)."""
+        reason = None
         if len(req.prompt) >= self.max_seq - 1:
-            raise ValueError(
-                f"request {req.rid}: prompt length {len(req.prompt)} >= "
-                f"max_seq - 1 ({self.max_seq - 1}); no decode budget left")
-        if req.max_new <= 1:
-            raise ValueError(
-                f"request {req.rid}: max_new={req.max_new} <= 1 would "
-                f"retire at admission; request at least 2 tokens")
-        self.requests.Push(req)
+            reason = (f"prompt length {len(req.prompt)} >= max_seq - 1 "
+                      f"({self.max_seq - 1}); no decode budget left")
+        elif req.max_new <= 1:
+            reason = (f"max_new={req.max_new} <= 1 would retire at "
+                      f"admission; request at least 2 tokens")
+        if reason is not None:
+            self._fail_request(req, TerminalEvent.rejected(
+                req.rid, f"invalid: {reason}"))
+            raise ValueError(f"request {req.rid}: {reason}")
+        req.submitted_at = self._clock()
+        if req.deadline_ms is not None:
+            self._deadlines_live = True
+        if self.overload == "reject":
+            if not self.requests.TryPush(req):
+                self._fail_request(req, TerminalEvent.rejected(
+                    req.rid, "queue_full"))
+                return False
+        else:
+            self.requests.Push(req)
+        return True
+
+    def _schedule_pending(self) -> None:
+        """SLA mode: drain every queued arrival into ``_pending`` and
+        keep it ordered by (class rank desc, deadline asc, submit
+        order) — a latency-class arrival overtakes queued batch work.
+        The sort is stable against the original submit order so
+        equal-SLA requests still serve FIFO."""
+        while True:
+            r = self.requests.TryPop()
+            if r is None:
+                break
+            if r.submitted_at == 0.0:
+                r.submitted_at = self._clock()
+            if r.deadline_ms is not None:
+                self._deadlines_live = True
+            self._pending.append(r)
+        if len(self._pending) > 1:
+            self._pending = collections.deque(sorted(
+                self._pending,
+                key=lambda r: (-class_rank(r.klass),
+                               r.deadline_ms if r.deadline_ms is not None
+                               else float("inf"),
+                               r.submitted_at, r.rid)))
+
+    def _backlog_tokens(self) -> int:
+        """Tokens of work already owed ahead of a new admission (active
+        decode budgets + admitting prefill remainders + parked work) —
+        the load-shedding delay model's numerator."""
+        t = sum(self._host_remaining[i]
+                for i, r in enumerate(self._slot_req) if r is not None)
+        t += sum((a.n_chunks - a.next_chunk) * self.chunk + a.req.max_new
+                 for a in self._admitting)
+        t += sum(rec.remaining for rec in self._preempted)
+        return t
+
+    def _projected_delay_ms(self) -> float:
+        """Projected queueing delay for a new admission: backlog tokens
+        amortized over the slots, at the smoothed step time."""
+        return (self._ewma_step_s * 1e3
+                * self._backlog_tokens() / max(self.n_slots, 1))
 
     def admit(self) -> int:
         """Fill free slots: resume preempted requests first, then pop the
@@ -1178,15 +1586,29 @@ class ContinuousBatcher:
 
         Paged: each placed request reserves its admission pages (or
         waits — admission backpressure) and enters chunked prefill.
-        Dense: one batched padded prefill per bucket."""
+        Dense: one batched padded prefill per bucket.
+
+        Lifecycle gates run here, before any slot or page is spent: a
+        request whose deadline already passed in the queue expires
+        (typed event), and — paged SLA mode — batch-class work whose
+        remaining deadline budget is smaller than the projected queue
+        delay is load-shed with a typed ``deadline_unmeetable``
+        rejection rather than admitted to miss it."""
+        if self.schedule == "sla":
+            self._schedule_pending()
         if not self.paged:
             free = [i for i, r in enumerate(self._slot_req) if r is None]
             pairs: List[Tuple[int, Request]] = []
-            for slot in free:
+            while len(pairs) < len(free):
                 r = self._next_request()
                 if r is None:
                     break
-                pairs.append((slot, r))
+                if self._expiry_left_ms(r) <= 0:
+                    self._fail_request(r, TerminalEvent.expired(
+                        r.rid, "deadline passed in queue"))
+                    self.retired += 1
+                    continue
+                pairs.append((free[len(pairs)], r))
             if pairs:
                 self._admit_batch(pairs)
             return len(pairs)
@@ -1194,10 +1616,23 @@ class ContinuousBatcher:
         busy = {a.slot for a in self._admitting}
         free = [i for i, r in enumerate(self._slot_req)
                 if r is None and i not in busy]
-        for slot in free:
+        fi = 0
+        while fi < len(free):
             r = self._next_request()
             if r is None:
                 break
+            left = self._expiry_left_ms(r)
+            if left <= 0:
+                self._fail_request(r, TerminalEvent.expired(
+                    r.rid, "deadline passed in queue"))
+                self.retired += 1
+                continue
+            if (self.schedule == "sla" and r.klass == "batch"
+                    and left < self._projected_delay_ms()):
+                self._fail_request(r, TerminalEvent.rejected(
+                    r.rid, "deadline_unmeetable"))
+                self.retired += 1
+                continue
             if len(r.prompt) >= self.max_seq or r.max_new < 1:
                 self._reject(r)    # bypassed submit() validation
                 continue
@@ -1205,13 +1640,33 @@ class ContinuousBatcher:
                    for g in self.layout.groups):
                 self._reject(r)    # can never fit, even in an empty pool
                 continue
-            if not self._try_admit_paged(r, slot):
+            if not self._try_admit_paged(r, free[fi]):
                 # pool dry: hold the request at the FIFO head until a
                 # retire frees pages — never an error.
                 self._pending.appendleft(r)
                 break
+            fi += 1
             admitted += 1
         return admitted
+
+    def _cancel_expired_slots(self) -> int:
+        """Cancel in-flight requests whose deadline passed: typed
+        Expired event (with the partial tokens already streamed), pages
+        freed IMMEDIATELY — a dead SLA must not hold pool capacity."""
+        n = 0
+        for i, r in enumerate(self._slot_req):
+            if r is None or self._expiry_left_ms(r) > 0:
+                continue
+            self._fail_request(r, TerminalEvent.expired(
+                r.rid, "deadline passed mid-decode"))
+            self.active = self.active.at[i].set(False)
+            self._slot_req[i] = None
+            if self.paged:
+                self._release_slot(i)
+                self._replay_skip[i] = 0
+            self.retired += 1
+            n += 1
+        return n
 
     def step(self) -> int:
         """One batched decode step; returns number of sequences retired.
@@ -1220,23 +1675,38 @@ class ContinuousBatcher:
         slot's block tables are grown to cover its next write position —
         allocating pages on demand and preempting the lowest-priority
         slot if the pool is dry.
-        """
+
+        A failure inside (or injected before) the jitted call is FATAL
+        for the batcher — the donated device state is unrecoverable in
+        place — and surfaces as ``BatcherFault``; under a
+        ``ServeSupervisor`` the in-flight requests are journaled,
+        pools rebuilt, and the journal replayed (``recover``)."""
+        if self._deadlines_live:
+            self._cancel_expired_slots()
         if self.paged and not self.reserve_decode:
             for slot in range(self.n_slots):
                 if self._slot_req[slot] is not None:
                     self._grow_slot(slot)
         if all(r is None for r in self._slot_req):
             return 0
-        if self.paged:
-            (self.pools, self.last_tok, self.pos, self.remaining,
-             self.active, out) = self._step(
-                self.params, self.pools, self.block_tab, self.last_tok,
-                self.pos, self.remaining, self.active)
-        else:
-            (self.cache, self.last_tok, self.pos, self.remaining,
-             self.active, out) = self._step(
-                self.params, self.cache, self.last_tok, self.pos,
-                self.remaining, self.active)
+        t0 = time.monotonic()
+        try:
+            self._fault.check("step")
+            if self.paged:
+                (self.pools, self.last_tok, self.pos, self.remaining,
+                 self.active, out) = self._step(
+                    self.params, self.pools, self.block_tab, self.last_tok,
+                    self.pos, self.remaining, self.active)
+            else:
+                (self.cache, self.last_tok, self.pos, self.remaining,
+                 self.active, out) = self._step(
+                    self.params, self.cache, self.last_tok, self.pos,
+                    self.remaining, self.active)
+        except Exception as e:
+            raise BatcherFault(e) from e
+        dt = time.monotonic() - t0
+        self._ewma_step_s = (dt if self._ewma_step_s == 0.0
+                             else 0.8 * self._ewma_step_s + 0.2 * dt)
         out = np.asarray(out)                  # the ONLY per-step transfer
         toks, finished = out[0], out[1]
         done = 0
@@ -1283,47 +1753,70 @@ class ContinuousBatcher:
         ``admit()`` so the allocator — not a hardcoded slot — picks its
         placement.  Preempted requests count as pending work: the loop
         never blocks (or exits on a closed stream) while any wait to
-        resume."""
+        resume.
+
+        A ``BatcherFault`` escaping the loop body is fatal: when
+        unsupervised, every in-flight request is errored (typed events —
+        no consumer hangs) before it propagates; under a
+        ``ServeSupervisor`` the fault propagates as-is and the
+        supervisor drives ``recover()``/``fail_inflight``."""
         decodes_since_chunk = 0
-        while self.retired < total_requests:
-            self.admit()
-            busy = any(r is not None for r in self._slot_req)
-            if self.paged and self._admitting:
-                if busy and decodes_since_chunk < self.prefill_interleave:
+        try:
+            while self.retired < total_requests:
+                if self._heartbeat is not None:
+                    self._heartbeat.beat("batcher")
+                if self._stalled:
+                    raise BatcherFault(StallFault(
+                        "batcher run loop missed its heartbeat window"))
+                self.admit()
+                busy = any(r is not None for r in self._slot_req)
+                if self.paged and self._admitting:
+                    if busy and decodes_since_chunk < self.prefill_interleave:
+                        self.step()
+                        decodes_since_chunk += 1
+                    else:
+                        self._prefill_step()
+                        decodes_since_chunk = 0
+                    continue
+                if busy:
                     self.step()
-                    decodes_since_chunk += 1
-                else:
-                    self._prefill_step()
-                    decodes_since_chunk = 0
-                continue
-            if busy:
-                self.step()
-                continue
-            if self._pending or (self.paged and self._preempted):
-                continue           # waiting on pages with idle slots:
+                    continue
+                if self._pending or (self.paged and self._preempted):
+                    continue       # waiting on pages with idle slots:
                                    # admit() above will retry/reject.
-            try:
-                r = self.requests.Pop(timeout=poll_timeout)
-            except TimeoutError:
-                continue                   # re-check; producer may be slow
-            except StreamClosed:
-                return                     # no more work will ever arrive
-            self._pending.appendleft(r)    # admit() places it next loop
+                try:
+                    r = self.requests.Pop(timeout=poll_timeout)
+                except TimeoutError:
+                    continue               # re-check; producer may be slow
+                except StreamClosed:
+                    return                 # no more work will ever arrive
+                self._pending.appendleft(r)  # admit() places it next loop
+        except BatcherFault as e:
+            if not self._supervised:
+                self.fail_inflight(e.cause)
+            raise
 
 
 def drain(req: Request, timeout: float = 30.0) -> List[int]:
     """Consumer PE helper: collect a request's full output stream.
 
-    ``StreamClosed`` is the normal end-of-sequence signal; a timeout means
-    the batcher stalled and is reported to the caller instead of being
-    silently swallowed as an empty/short result."""
+    ``StreamClosed`` is the normal end-of-sequence signal.  A typed
+    ``TerminalEvent`` in the stream (the batcher's in-band failure
+    marker) re-raises as the matching ``RequestFailed`` subclass —
+    carrying the partial tokens and chaining the original cause — so a
+    failed request surfaces its real error immediately instead of
+    timing out here 30 s later.  A timeout still means the batcher
+    stalled without managing to say so."""
     out: List[int] = []
     while True:
         try:
-            out.append(req.out.Pop(timeout=timeout))
+            v = req.out.Pop(timeout=timeout)
         except StreamClosed:
             return out
         except TimeoutError:
             raise TimeoutError(
                 f"drain(rid={req.rid}) timed out after {timeout:.0f}s with "
                 f"{len(out)} token(s) received — batcher stalled or died")
+        if isinstance(v, TerminalEvent):
+            raise v.to_error(out) from v.cause
+        out.append(v)

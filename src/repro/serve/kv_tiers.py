@@ -62,12 +62,42 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.params import Decl
+from .resilience import FaultPlan
 
-_SNAPSHOT_VERSION = 1
+# v2 wraps the payload in a {version, sha256, blob} envelope so load can
+# verify content integrity before unpickling the payload proper.
+_SNAPSHOT_VERSION = 2
+
+
+class SnapshotCorruptError(RuntimeError):
+    """A T2 snapshot failed integrity verification (truncated file,
+    checksum mismatch, unreadable pickle).  Callers treat this as a
+    logged cold start — unlike a geometry mismatch (``ValueError``),
+    which means the snapshot is *valid but wrong for this layout* and
+    keeps raising."""
 
 
 def _tree_nbytes(tree) -> int:
     return sum(int(np.asarray(leaf).nbytes) for leaf in jax.tree.leaves(tree))
+
+
+def _flip_bit(path: str) -> None:
+    """Simulated bit-rot: flip one bit in the middle of the file (inside
+    the checksummed blob, so load's digest check must catch it)."""
+    with open(path, "r+b") as f:
+        f.seek(0, os.SEEK_END)
+        mid = f.tell() // 2
+        f.seek(mid)
+        b = f.read(1)
+        f.seek(mid)
+        f.write(bytes([b[0] ^ 0x40]))
+
+
+def _truncate_half(path: str) -> None:
+    """Simulated torn write / partial copy: drop the file's second half."""
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
 
 
 def _content_key(tokens) -> bytes:
@@ -89,8 +119,9 @@ class StagedTransferEngine:
     the transfer counters in ``stats()`` describe all tier traffic.
     """
 
-    def __init__(self, layout):
+    def __init__(self, layout, faults: Optional[FaultPlan] = None):
         self.layout = layout
+        self.faults = faults or FaultPlan()
         self.gathers = 0             # staged spill/demote calls
         self.scatters = 0            # staged restore/promote calls
         self.d2h_bytes = 0
@@ -106,10 +137,11 @@ class StagedTransferEngine:
         overlaps the gather of the next — the double buffer — instead
         of the old per-page gather -> blocking copy -> gather loop.
         Groups with no pages are omitted from the result."""
+        if not any(pages_by_group.values()):
+            return {}                   # nothing to move: not a transfer
+        self.faults.check("t1_d2h")
         dev = {name: self.layout.gather_pages(pools, name, pages)
                for name, pages in pages_by_group.items() if pages}
-        if not dev:                     # nothing to move: not a transfer
-            return {}
         out = {name: jax.tree.map(np.asarray, tree)
                for name, tree in dev.items()}
         self.gathers += 1
@@ -123,11 +155,12 @@ class StagedTransferEngine:
         Stage 1 moves every group's payload onto the device (async
         H2D, dtype preserved leaf-wise); stage 2 runs one scatter per
         pool leaf.  Returns the updated pools dict."""
+        if not any(pages_by_group.get(name) for name in data_by_group):
+            return pools                # nothing to move: not a transfer
+        self.faults.check("t1_h2d")
         staged = {name: jax.tree.map(jnp.asarray, data_by_group[name])
                   for name in data_by_group
                   if pages_by_group.get(name)}
-        if not staged:                  # nothing to move: not a transfer
-            return pools
         for name, tree in staged.items():
             pools = self.layout.restore_pages(pools, name, tree,
                                               pages_by_group[name])
@@ -230,8 +263,10 @@ class KVTierManager:
     """
 
     def __init__(self, layout, page_size: int, block: int,
-                 budget_bytes: int, engine: StagedTransferEngine):
+                 budget_bytes: int, engine: StagedTransferEngine,
+                 faults: Optional[FaultPlan] = None):
         self.layout = layout
+        self.faults = faults or engine.faults
         self.page = int(page_size)
         self.block = int(block)
         self.bpp = self.block // self.page     # pages per block, per group
@@ -334,24 +369,37 @@ class KVTierManager:
         flushed through ``demote`` first, so the snapshot carries the
         device tier too (bounded by the T1 byte budget).  Returns the
         number of entries written.  The write is atomic (tmp + rename):
-        a crash mid-save never corrupts the previous snapshot."""
+        a crash mid-save never corrupts the previous snapshot.  The
+        payload is pickled once and wrapped with its SHA-256 so load
+        detects truncation/bit-rot before touching the entries."""
         if index is not None and pools is not None:
             for path_tokens, pages in index.walk():
                 self.demote(path_tokens, pages, pools)
         entries = [(key, e.data, e.stamp)
                    for key, e in self.store.items_lru_order()]
         payload = {
-            "version": _SNAPSHOT_VERSION,
             "page": self.page,
             "block": self.block,
             "groups": sorted(g.name for g in self.layout.groups),
             "leaf_sig": self._payload_signature(),
             "entries": entries,
         }
+        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        envelope = {
+            "version": _SNAPSHOT_VERSION,
+            "sha256": hashlib.sha256(blob).hexdigest(),
+            "blob": blob,
+        }
         tmp = f"{path}.tmp"
         with open(tmp, "wb") as f:
-            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+            pickle.dump(envelope, f, protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)
+        # fault sites for the storage-rot chaos tests: mangle the file
+        # AFTER the atomic rename, exactly as bit-rot/truncation would.
+        if self.faults.fire("snapshot_corrupt"):
+            _flip_bit(path)
+        if self.faults.fire("snapshot_truncate"):
+            _truncate_half(path)
         return len(entries)
 
     def load(self, path: str) -> int:
@@ -360,13 +408,34 @@ class KVTierManager:
         restoring pages of a different shape would corrupt the pools,
         so a mismatch raises.  Entries re-enter in LRU order under the
         current byte budget (oldest dropped first if the budget shrank
-        since the save)."""
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
-        if payload.get("version") != _SNAPSHOT_VERSION:
-            raise ValueError(
-                f"kv tier snapshot {path}: version "
-                f"{payload.get('version')} != {_SNAPSHOT_VERSION}")
+        since the save).
+
+        Integrity failures (unreadable file, bad version envelope,
+        checksum mismatch, truncation) raise ``SnapshotCorruptError`` —
+        the batcher degrades those to a logged cold start.  A snapshot
+        that verifies but doesn't fit this layout raises ``ValueError``
+        as before: that is a configuration error, not storage rot."""
+        try:
+            with open(path, "rb") as f:
+                envelope = pickle.load(f)
+            version = envelope.get("version")
+            blob = envelope.get("blob")
+            digest = envelope.get("sha256")
+            if (version != _SNAPSHOT_VERSION or not isinstance(blob, bytes)
+                    or hashlib.sha256(blob).hexdigest() != digest):
+                raise SnapshotCorruptError(
+                    f"kv tier snapshot {path}: bad envelope or checksum "
+                    f"mismatch (version={version!r})")
+            payload = pickle.loads(blob)
+            if not isinstance(payload, dict) or "entries" not in payload:
+                raise SnapshotCorruptError(
+                    f"kv tier snapshot {path}: payload malformed")
+        except SnapshotCorruptError:
+            raise
+        except Exception as e:   # OSError, pickle errors, EOF, attribute…
+            raise SnapshotCorruptError(
+                f"kv tier snapshot {path}: unreadable "
+                f"({type(e).__name__}: {e})") from e
         groups = sorted(g.name for g in self.layout.groups)
         if (payload["page"] != self.page or payload["block"] != self.block
                 or payload["groups"] != groups):

@@ -107,6 +107,22 @@ class PageAllocator:
 
     decref = free
 
+    def check_consistency(self) -> None:
+        """Full-pool invariant check (chaos tests run this after every
+        recovery path): free list and refcount table partition the pool,
+        no duplicates, no zero refcounts.  Raises ``AssertionError``."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate pages in free list"
+        assert not free & self._rc.keys(), "page both free and allocated"
+        assert all(0 <= p < self.n_pages for p in free), \
+            "out-of-range page in free list"
+        assert all(0 <= p < self.n_pages for p in self._rc), \
+            "out-of-range page in refcount table"
+        assert all(c > 0 for c in self._rc.values()), \
+            "zero/negative refcount retained"
+        assert len(self._free) + len(self._rc) == self.n_pages, \
+            "free + allocated != pool size (leaked or duplicated pages)"
+
 
 class _Node:
     """One radix-tree edge: ``block`` prompt tokens -> their pages."""

@@ -6,9 +6,11 @@ the checkpoint interval.  The pieces here are runtime-agnostic (they
 watch step timing, not hardware counters) and are exercised by tests
 that simulate failures on CPU:
 
-* ``Heartbeat``          — per-worker liveness with a miss threshold.
+* ``Heartbeat``          — per-worker liveness with a miss threshold
+  (shared with the serving supervisor; lives in ``core.health``).
 * ``StragglerDetector``  — per-step EWMA/variance z-score; flags workers
-  (or the whole step pipeline) running slower than the fleet.
+  (or the whole step pipeline) running slower than the fleet (also in
+  ``core.health``).
 * ``elastic_mesh``       — rebuild a smaller (or larger) mesh after
   failures; ``reshard_state`` re-places a checkpointed state onto it
   (works because checkpoints are full logical arrays, not raw shards).
@@ -20,68 +22,18 @@ that simulate failures on CPU:
 from __future__ import annotations
 
 import dataclasses
-import math
-import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
+from ..core.health import Heartbeat, StragglerDetector
 from . import checkpoint as ckpt
 
-
-class Heartbeat:
-    """Liveness registry.  Workers call ``beat(worker)``; the monitor
-    thread marks workers dead after ``timeout`` seconds of silence."""
-
-    def __init__(self, workers: Sequence[str], timeout: float = 10.0):
-        self.timeout = timeout
-        self._last: Dict[str, float] = {w: time.monotonic() for w in workers}
-        self._lock = threading.Lock()
-
-    def beat(self, worker: str) -> None:
-        with self._lock:
-            self._last[worker] = time.monotonic()
-
-    def dead(self, now: Optional[float] = None) -> List[str]:
-        now = now if now is not None else time.monotonic()
-        with self._lock:
-            return [w for w, t in self._last.items()
-                    if now - t > self.timeout]
-
-    def alive(self) -> List[str]:
-        d = set(self.dead())
-        with self._lock:
-            return [w for w in self._last if w not in d]
-
-
-class StragglerDetector:
-    """EWMA step-time tracker.  ``observe`` returns True when the new
-    sample is a straggler (> mean + z·std, with warmup grace)."""
-
-    def __init__(self, alpha: float = 0.2, z: float = 3.0, warmup: int = 5,
-                 min_dt: float = 0.05):
-        self.alpha, self.z, self.warmup = alpha, z, warmup
-        self.min_dt = min_dt      # ignore sub-jitter steps (CPU smoke runs)
-        self.mean = 0.0
-        self.var = 0.0
-        self.n = 0
-
-    def observe(self, dt: float) -> bool:
-        self.n += 1
-        if self.n == 1:
-            self.mean = dt
-            return False
-        is_straggler = (self.n > self.warmup
-                        and dt > self.min_dt
-                        and dt > self.mean + self.z * math.sqrt(self.var)
-                        and dt > 1.5 * self.mean)
-        d = dt - self.mean
-        self.mean += self.alpha * d
-        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
-        return is_straggler
+__all__ = ["Heartbeat", "StragglerDetector", "elastic_mesh",
+           "reshard_state", "SupervisorReport", "TrainSupervisor"]
 
 
 def elastic_mesh(axis_names: Tuple[str, ...], model_axis: int,

@@ -205,13 +205,25 @@ def test_out_of_pages_admission_backpressure(model):
 
 def test_unservable_request_rejected_not_deadlocked(model):
     """A request needing more pages than the WHOLE pool can never be
-    served: its stream closes (empty output) instead of livelocking."""
+    served: its consumer gets a typed ``RequestRejected`` (no tokens,
+    no livelock, no drain timeout) and other requests still serve."""
+    from repro.serve.resilience import RequestRejected
     cfg, params = model
     paged_cfg = dataclasses.replace(cfg, kv_page_size=8)
     prompts = _prompts(cfg, [20, 6])
-    got, bat = _run_batcher(paged_cfg, params, prompts, [8, 4], n_pages=2)
-    assert got[0] == []                          # rejected, closed
-    assert len(got[1]) == 4                      # small one still served
+    bat = ContinuousBatcher(paged_cfg, params, n_slots=2, max_seq=32,
+                            n_pages=2)
+    reqs = [Request(rid=i, prompt=p, max_new=mn)
+            for i, (p, mn) in enumerate(zip(prompts, [8, 4]))]
+    prod = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+    prod.start()
+    bat.run(len(reqs))
+    prod.join()
+    with pytest.raises(RequestRejected, match="unservable") as ei:
+        drain(reqs[0])
+    assert ei.value.tokens == []                 # rejected, no output
+    assert len(drain(reqs[1])) == 4              # small one still served
+    assert bat.stats()["rejections"] == {"unservable": 1}
 
 
 def test_block_table_correct_after_retire_then_reuse(model):

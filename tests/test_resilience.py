@@ -1,0 +1,585 @@
+"""Resilient serving (serve.resilience + batching): typed request
+lifecycle (no consumer ever hangs on a failed request), deterministic
+fault injection, SLA scheduling/deadlines/load-shedding, snapshot
+integrity, the tier degradation ladder, and supervised crash recovery
+with bit-identical surviving outputs.
+
+The chaos matrix is the hlslib discipline applied to the serving
+engine: every failure mode — transfer fault, snapshot rot, allocator
+exhaustion, step crash — is simulated deterministically on CPU and the
+recovery contract (typed errors, allocator invariants, bit-exact
+survivors) asserted in CI, not discovered in deployment.
+"""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import smoke_variant
+from repro.models import registry
+from repro.serve.batching import ContinuousBatcher, Request, drain
+from repro.serve.kv_tiers import SnapshotCorruptError
+from repro.serve.resilience import (CLASS_RANK, FaultPlan, InjectedFault,
+                                    RequestErrored, RequestExpired,
+                                    RequestFailed, RequestRejected,
+                                    ServeSupervisor, TerminalEvent)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    return cfg, registry.init(cfg, 0)
+
+
+@pytest.fixture(scope="module")
+def model_int8(model):
+    cfg, _ = model
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    return icfg, registry.init(icfg, 0)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _paged_cfg(cfg, **kw):
+    base = dict(kv_page_size=8, prefill_chunk=8)
+    base.update(kw)
+    return dataclasses.replace(cfg, **base)
+
+
+def _reqs(cfg, n, max_new=6, plen=12, **kw):
+    return [Request(rid=i, prompt=_prompt(cfg, plen, seed=i),
+                    max_new=max_new, **kw) for i in range(n)]
+
+
+def _run(bat, reqs, total=None, expect_raise=None):
+    """Submit everything up-front (tests pass queue_depth >= len(reqs)),
+    run the batcher in THIS thread, optionally asserting the run dies
+    with ``expect_raise``."""
+    for r in reqs:
+        bat.submit(r)
+    if expect_raise is None:
+        bat.run(total if total is not None else len(reqs))
+        return None
+    with pytest.raises(expect_raise) as ei:
+        bat.run(total if total is not None else len(reqs))
+    return ei.value
+
+
+def _drain_all(reqs, timeout=10.0):
+    """Drain every request with a SHORT timeout: outcomes are
+    (tokens, None) or (partial, error).  A TimeoutError here means a
+    consumer hung — the exact bug the typed events exist to prevent."""
+    outs = {}
+    for r in reqs:
+        try:
+            outs[r.rid] = (drain(r, timeout=timeout), None)
+        except RequestFailed as e:
+            outs[r.rid] = (e.tokens, e)
+    return outs
+
+
+def _gold(cfg, params, reqs_spec, **bkw):
+    """Fault-free oracle run with identical geometry; returns rid->tokens."""
+    bat = ContinuousBatcher(cfg, params, **bkw)
+    reqs = [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
+            for r in reqs_spec]
+    _run(bat, reqs)
+    return {r.rid: drain(r, timeout=10.0) for r in reqs}
+
+
+def _check_allocators(bat):
+    for alloc in bat._alloc.values():
+        alloc.check_consistency()
+
+
+# --- FaultPlan -------------------------------------------------------------------------
+
+
+def test_fault_plan_grammar_and_determinism():
+    p = FaultPlan("a:3;b:2+;c:2..4;d:*", seed=1)
+    assert [p.fire("a") for _ in range(5)] == [False, False, True,
+                                              False, False]
+    assert [p.fire("b") for _ in range(4)] == [False, True, True, True]
+    assert [p.fire("c") for _ in range(5)] == [False, True, True,
+                                              True, False]
+    assert all(p.fire("d") for _ in range(3))
+    assert not p.fire("unknown")
+    assert p.fired["a"] == [3] and p.fired["c"] == [2, 3, 4]
+    # probabilistic clauses replay exactly under the same seed...
+    seq1 = [FaultPlan("x:*@0.5", seed=9).fire("x") for _ in range(1)]
+    runs = [[f.fire("x") for _ in range(20)]
+            for f in (FaultPlan("x:*@0.5", seed=9),
+                      FaultPlan("x:*@0.5", seed=9))]
+    assert runs[0] == runs[1] and True in runs[0] and False in runs[0]
+    # ...and differ under another seed (with overwhelming probability).
+    assert runs[0] != [FaultPlan("x:*@0.5", seed=10).fire("x")
+                       for _ in range(20)]
+    with pytest.raises(ValueError):
+        FaultPlan("nocolon")
+    assert not FaultPlan("").active
+    with pytest.raises(InjectedFault):
+        FaultPlan("s:1").check("s")
+
+
+def test_fault_plan_env_resolution(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "env_site:1")
+    monkeypatch.setenv("REPRO_FAULT_SEED", "5")
+    p = FaultPlan.resolve(None, "cfg_site:1")
+    assert p.spec == "env_site:1" and p.seed == 5
+    assert FaultPlan.resolve("explicit:1", "cfg_site:1").spec == "explicit:1"
+    monkeypatch.delenv("REPRO_FAULTS")
+    assert FaultPlan.resolve(None, "cfg_site:1").spec == "cfg_site:1"
+    pre = FaultPlan("x:1", seed=3)
+    assert FaultPlan.resolve(pre) is pre
+
+
+# --- error propagation (the satellite-1 regression) ------------------------------------
+
+
+def test_failing_step_errors_consumers_fast(model):
+    """A step exception must NOT strand drain() until its 30 s timeout:
+    every in-flight consumer gets a typed Errored event carrying the
+    original cause, and the run loop re-raises it as BatcherFault."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=64, faults="step:2")
+    reqs = _reqs(pcfg, 4)
+    err = _run(bat, reqs, expect_raise=Exception)
+    assert isinstance(err.cause, InjectedFault)
+    outs = _drain_all(reqs, timeout=5.0)     # short: no 30 s hang allowed
+    failures = [e for _, e in outs.values() if e is not None]
+    assert failures, "the step fault must surface to at least one consumer"
+    for toks, e in outs.values():
+        if e is not None:
+            assert isinstance(e, RequestErrored) or e.reason.startswith(
+                "batcher shut down")
+            if isinstance(e, RequestErrored):
+                assert isinstance(e.__cause__, InjectedFault)
+    st = bat.stats()
+    assert st["errored"] + st["cancelled"] == len(failures)
+
+
+def test_dense_step_fault_also_propagates(model):
+    """The dense (non-paged) path has no journaled recovery, but its
+    consumers still get typed events instead of hanging."""
+    cfg, params = model
+    bat = ContinuousBatcher(cfg, params, n_slots=2, max_seq=32,
+                            queue_depth=64, faults="step:1")
+    reqs = _reqs(cfg, 2, plen=8, max_new=4)
+    _run(bat, reqs, expect_raise=Exception)
+    outs = _drain_all(reqs, timeout=5.0)
+    assert all(e is not None for _, e in outs.values())
+
+
+def test_chunk_fault_errors_only_affected(model):
+    """An injected prefill-chunk fault kills exactly ONE request (typed
+    Errored, original cause attached); every other stream is
+    bit-identical to the fault-free run."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    spec = _reqs(pcfg, 3, plen=20, max_new=5)
+    gold = _gold(pcfg, params, spec, n_slots=2, max_seq=64, queue_depth=64)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=64, faults="chunk:2")
+    reqs = _reqs(pcfg, 3, plen=20, max_new=5)
+    _run(bat, reqs)                           # chunk faults are NOT fatal
+    outs = _drain_all(reqs, timeout=10.0)
+    errs = {rid: e for rid, (_, e) in outs.items() if e is not None}
+    assert len(errs) == 1
+    (rid, e), = errs.items()
+    assert isinstance(e, RequestErrored)
+    assert isinstance(e.__cause__, InjectedFault)
+    for r in reqs:
+        if r.rid not in errs:
+            assert outs[r.rid][0] == gold[r.rid], f"rid {r.rid} diverged"
+    _check_allocators(bat)
+    assert bat.stats()["errored"] == 1
+
+
+# --- supervised crash recovery ---------------------------------------------------------
+
+
+def test_supervisor_recovers_bit_identical(model):
+    """Fatal step fault under ServeSupervisor: pools rebuilt, in-flight
+    requests journaled + replayed — every output bit-identical to the
+    fault-free run, allocator invariants intact."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg, prefix_cache=True)
+    spec = _reqs(pcfg, 4, plen=12, max_new=6)
+    gold = _gold(pcfg, params, spec, n_slots=2, max_seq=64, queue_depth=64)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=64, faults="step:3")
+    sup = ServeSupervisor(bat, max_restarts=2)
+    reqs = _reqs(pcfg, 4, plen=12, max_new=6)
+    for r in reqs:
+        bat.submit(r)
+    report = sup.run(len(reqs))
+    assert report.restarts == 1 and report.faults == 1
+    assert report.recovered_requests >= 1
+    outs = _drain_all(reqs, timeout=10.0)
+    for r in reqs:
+        toks, e = outs[r.rid]
+        assert e is None, f"rid {r.rid} errored under recovery: {e}"
+        assert toks == gold[r.rid], f"rid {r.rid} not bit-identical"
+    assert bat.stats()["restarts"] == 1
+    _check_allocators(bat)
+
+
+def test_supervisor_exhausts_restart_budget(model):
+    """Faults on every step: after max_restarts recoveries the
+    supervisor errors the in-flight requests and re-raises."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=64, faults="step:*")
+    sup = ServeSupervisor(bat, max_restarts=1)
+    reqs = _reqs(pcfg, 2, plen=12, max_new=6)
+    for r in reqs:
+        bat.submit(r)
+    with pytest.raises(Exception) as ei:
+        sup.run(len(reqs))
+    assert isinstance(ei.value.cause, InjectedFault)
+    assert sup.report.restarts == 1
+    outs = _drain_all(reqs, timeout=5.0)
+    assert all(e is not None for _, e in outs.values())
+
+
+def test_stall_watchdog_triggers_supervised_restart(model):
+    """The stalled flag (set by the watchdog when the heartbeat goes
+    silent) surfaces as a recoverable BatcherFault: a supervised run
+    restarts once and still completes with exact outputs."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    spec = _reqs(pcfg, 2, plen=12, max_new=5)
+    gold = _gold(pcfg, params, spec, n_slots=2, max_seq=64, queue_depth=64)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=64)
+    sup = ServeSupervisor(bat, max_restarts=2)
+    bat._stalled = True                  # what the watchdog would set
+    reqs = _reqs(pcfg, 2, plen=12, max_new=5)
+    for r in reqs:
+        bat.submit(r)
+    report = sup.run(len(reqs))
+    assert report.restarts == 1
+    outs = _drain_all(reqs, timeout=10.0)
+    for r in reqs:
+        assert outs[r.rid] == (gold[r.rid], None)
+
+
+def test_heartbeat_is_shared_with_training():
+    """The tentpole hoist: serving and training supervisors use the SAME
+    Heartbeat/StragglerDetector classes from core.health."""
+    from repro.core import health
+    from repro.train import fault as tf
+    assert tf.Heartbeat is health.Heartbeat
+    assert tf.StragglerDetector is health.StragglerDetector
+
+
+# --- chaos matrix: fault site x layout family ------------------------------------------
+
+_CHAOS_SITES = ["step:2", "chunk:2", "t1_d2h:1+", "t1_h2d:1+", "alloc:3..5"]
+
+
+@pytest.mark.parametrize("family", ["bf16", "int8"])
+@pytest.mark.parametrize("site", _CHAOS_SITES)
+def test_chaos_matrix(model, model_int8, family, site):
+    """Under every injected fault: no consumer hangs (short drain
+    timeout), only affected requests error (with the original cause),
+    allocator invariants hold after recovery, and every surviving
+    stream is bit-identical to the fault-free run."""
+    cfg, params = model_int8 if family == "int8" else model
+    # tight pool + tiny tier budget force demote/spill/promote traffic
+    # so the t1_* sites actually fire; restore_min=0 prefers restore.
+    pcfg = _paged_cfg(cfg, prefix_cache=True, kv_host_tier_bytes=1 << 20,
+                      tier_restore_min_tokens=0)
+    kw = dict(n_slots=2, max_seq=64, queue_depth=64, n_pages=8)
+    spec = _reqs(pcfg, 4, plen=16, max_new=12)
+    gold = _gold(pcfg, params, spec, **kw)
+    bat = ContinuousBatcher(pcfg, params, faults=site, **kw)
+    sup = ServeSupervisor(bat, max_restarts=2)
+    reqs = _reqs(pcfg, 4, plen=16, max_new=12)
+    for r in reqs:
+        bat.submit(r)
+    sup.run(len(reqs))
+    outs = _drain_all(reqs, timeout=10.0)     # no hung drain()
+    for r in reqs:
+        toks, e = outs[r.rid]
+        if e is not None:
+            assert isinstance(e, RequestErrored)
+            assert isinstance(e.__cause__, InjectedFault)
+            continue
+        assert toks == gold[r.rid], \
+            f"rid {r.rid} diverged under fault {site} ({family})"
+    errs = sum(1 for _, e in outs.values() if e is not None)
+    if site.startswith(("t1_", "alloc")):
+        # degradation-ladder faults never kill a request: retries fall
+        # through to recompute, which is exact.
+        assert errs == 0
+    assert errs <= 1                          # only the affected request
+    _check_allocators(bat)
+    assert bat.retired == len(reqs)
+
+
+# --- snapshot integrity ----------------------------------------------------------------
+
+
+def _tier_cfg(cfg, snapshot, faults=""):
+    return _paged_cfg(cfg, prefix_cache=True, kv_host_tier_bytes=1 << 20,
+                      tier_restore_min_tokens=0, kv_tier_snapshot=snapshot,
+                      fault_plan=faults)
+
+
+def _serve_one(pcfg, params, prompt, max_new=5):
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=8)
+    r = Request(rid=0, prompt=prompt, max_new=max_new)
+    _run(bat, [r])
+    drain(r, timeout=10.0)
+    return bat
+
+
+@pytest.mark.parametrize("mangle", ["snapshot_corrupt", "snapshot_truncate"])
+def test_snapshot_corruption_degrades_to_cold_start(model, tmp_path, mangle):
+    """A bit-flipped or truncated T2 snapshot fails its checksum at
+    load and degrades to a logged cold start — the batcher constructs
+    and serves normally — instead of raising mid-construction.  Direct
+    load raises SnapshotCorruptError."""
+    cfg, params = model
+    snap = str(tmp_path / "kv.snap")
+    prompt = _prompt(cfg, 16, seed=3)
+    # save with a post-rename mangling fault injected
+    bat = _serve_one(_tier_cfg(cfg, snap, faults=f"{mangle}:1"),
+                     params, prompt)
+    bat.save_tier_snapshot()
+    with pytest.raises(SnapshotCorruptError):
+        bat._tiers.load(snap)
+    with pytest.warns(UserWarning, match="cold start"):
+        bat2 = ContinuousBatcher(_tier_cfg(cfg, snap), params, n_slots=2,
+                                 max_seq=64, queue_depth=8)
+    assert bat2.snapshot_cold_start
+    assert bat2.stats()["snapshot_cold_start"]
+    assert bat2._tiers is not None and len(bat2._tiers.store) == 0
+    r = Request(rid=1, prompt=prompt, max_new=5)
+    _run(bat2, [r])
+    assert len(drain(r, timeout=10.0)) == 5   # serves fine from cold
+
+
+def test_snapshot_checksum_roundtrip(model, tmp_path):
+    """An unmangled v2 snapshot round-trips: entries reload and the
+    next batcher's first hit restores from T1."""
+    cfg, params = model
+    snap = str(tmp_path / "kv.snap")
+    prompt = _prompt(cfg, 24, seed=4)
+    bat = _serve_one(_tier_cfg(cfg, snap), params, prompt)
+    bat.save_tier_snapshot()
+    bat2 = ContinuousBatcher(_tier_cfg(cfg, snap), params, n_slots=2,
+                             max_seq=64, queue_depth=8)
+    assert not bat2.snapshot_cold_start
+    assert bat2._tiers.stats()["snapshot_loaded"] >= 1
+
+
+# --- overload + SLA lifecycle ----------------------------------------------------------
+
+
+def test_submit_queue_policy_reject(model):
+    """overload="reject": a full bounded queue sheds with a typed
+    queue_full rejection (surfaced in stats()["rejections"]) instead of
+    blocking the producer; shed requests never count toward retired."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=2, overload="reject")
+    reqs = _reqs(pcfg, 4, plen=8, max_new=4)
+    accepted = [bat.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False]
+    assert bat.stats()["rejections"] == {"queue_full": 2}
+    assert bat.retired == 0                   # shed != retired
+    for r in reqs[2:]:
+        with pytest.raises(RequestRejected, match="queue_full"):
+            drain(r, timeout=2.0)
+    bat.run(2)                                # accepted two still serve
+    assert all(len(drain(r, timeout=10.0)) == 4 for r in reqs[:2])
+
+
+def test_submit_invalid_pushes_typed_event(model):
+    """Degenerate requests still raise ValueError at submit() AND leave
+    a typed Rejected event for a consumer on another thread."""
+    cfg, params = model
+    bat = ContinuousBatcher(_paged_cfg(cfg), params, n_slots=2, max_seq=32)
+    bad = Request(rid=9, prompt=_prompt(cfg, 40), max_new=4)
+    with pytest.raises(ValueError):
+        bat.submit(bad)
+    with pytest.raises(RequestRejected, match="invalid"):
+        drain(bad, timeout=2.0)
+    assert list(bat.stats()["rejections"]) == [
+        "invalid: prompt length 40 >= max_seq - 1 (31); no decode "
+        "budget left"]
+
+
+def test_deadline_expiry_queue_and_inflight(model):
+    """A fake clock drives the lifecycle: requests whose deadline passes
+    in the queue expire before admission; an in-flight request expires
+    mid-decode with its partial tokens attached and pages freed."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    # NB: nonzero epoch — submitted_at == 0.0 is the "unstamped" sentinel.
+    fake = [100.0]
+    bat = ContinuousBatcher(pcfg, params, n_slots=1, max_seq=64,
+                            queue_depth=8, clock=lambda: fake[0])
+    # r0 occupies the single slot; r1's deadline dies while queued.
+    r0 = Request(rid=0, prompt=_prompt(cfg, 8, 0), max_new=6)
+    r1 = Request(rid=1, prompt=_prompt(cfg, 8, 1), max_new=6,
+                 deadline_ms=50.0)
+    bat.submit(r0)
+    bat.submit(r1)
+    fake[0] = 101.0                           # 1000 ms pass "instantly"
+    bat.run(2)
+    assert len(drain(r0, timeout=10.0)) == 6
+    with pytest.raises(RequestExpired):
+        drain(r1, timeout=2.0)
+    assert bat.stats()["expired"] == 1
+    _check_allocators(bat)
+    # in-flight expiry: admit, then advance the clock mid-run.
+    r2 = Request(rid=2, prompt=_prompt(cfg, 8, 2), max_new=30,
+                 deadline_ms=500.0)
+    bat.submit(r2)
+    bat.admit()
+    while bat._admitting:
+        bat._prefill_step()
+    for _ in range(3):
+        bat.step()
+    fake[0] += 10.0
+    bat.step()
+    with pytest.raises(RequestExpired) as ei:
+        drain(r2, timeout=2.0)
+    assert len(ei.value.tokens) >= 1          # partial prefix delivered
+    assert bat._slot_req == [None]
+    assert bat.total_used_pages() == 0        # expiry freed the pages
+    _check_allocators(bat)
+
+
+def test_sla_schedule_and_shedding(model):
+    """schedule="sla": a latency-class arrival overtakes earlier batch
+    work for the only slot, and batch-class work with an unmeetable
+    deadline is load-shed with a typed rejection."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    fake = [0.0]
+    bat = ContinuousBatcher(pcfg, params, n_slots=1, max_seq=64,
+                            queue_depth=8, schedule="sla",
+                            clock=lambda: fake[0])
+    order = []
+    b0 = Request(rid=0, prompt=_prompt(cfg, 8, 0), max_new=4, klass="batch")
+    b1 = Request(rid=1, prompt=_prompt(cfg, 8, 1), max_new=4, klass="batch")
+    lat = Request(rid=2, prompt=_prompt(cfg, 8, 2), max_new=4,
+                  klass="latency")
+    for r in (b0, b1, lat):                   # latency submitted LAST
+        bat.submit(r)
+    threads = [threading.Thread(
+        target=lambda r=r: (drain(r, timeout=30.0), order.append(r.rid)))
+        for r in (b0, b1, lat)]
+    for t in threads:
+        t.start()
+    bat.run(3)
+    for t in threads:
+        t.join()
+    assert order[0] == 2, f"latency class must finish first, got {order}"
+    # shedding: pretend decode is slow and the backlog is deep — a
+    # batch request with a tiny deadline is rejected at admission while
+    # the filler's backlog is still in front of it (2 slots so both are
+    # examined in the same admit pass).
+    bat2 = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                             queue_depth=8, schedule="sla",
+                             clock=lambda: fake[0])
+    bat2._ewma_step_s = 1.0                   # 1 s/step projected
+    filler = Request(rid=10, prompt=_prompt(cfg, 8, 3), max_new=20)
+    shed = Request(rid=11, prompt=_prompt(cfg, 8, 4), max_new=4,
+                   klass="batch", deadline_ms=1.0)
+    bat2.submit(filler)
+    bat2.submit(shed)
+    bat2.run(2)
+    assert len(drain(filler, timeout=10.0)) == 20
+    with pytest.raises(RequestRejected, match="deadline_unmeetable"):
+        drain(shed, timeout=2.0)
+    assert bat2.stats()["rejections"] == {"deadline_unmeetable": 1}
+
+
+def test_class_rank_drives_preemption(model):
+    """SLA class maps onto preemption: under pool pressure the batch-
+    class slot is preempted, never the latency-class one."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg)
+    bat = ContinuousBatcher(pcfg, params, n_slots=2, max_seq=64,
+                            queue_depth=8, n_pages=8)
+    lat = Request(rid=0, prompt=_prompt(cfg, 16, 0), max_new=12,
+                  klass="latency")
+    batch = Request(rid=1, prompt=_prompt(cfg, 16, 1), max_new=12,
+                    klass="batch")
+    bat.submit(lat)
+    bat.submit(batch)
+    bat.run(2)
+    assert len(drain(lat, timeout=10.0)) == 12
+    assert len(drain(batch, timeout=10.0)) == 12
+    if bat.preempted_rids:
+        assert 0 not in bat.preempted_rids
+    _check_allocators(bat)
+
+
+# --- tier degradation ladder -----------------------------------------------------------
+
+
+def test_repeated_tier_faults_disable_tier(model):
+    """Rung 3 of the ladder: after tier_fault_limit failed transfers the
+    host tier turns off and serving continues (recompute path), outputs
+    exact."""
+    cfg, params = model
+    pcfg = _paged_cfg(cfg, prefix_cache=True, kv_host_tier_bytes=1 << 20,
+                      tier_restore_min_tokens=0)
+    kw = dict(n_slots=2, max_seq=64, queue_depth=64, n_pages=10)
+    spec = _reqs(pcfg, 4, plen=16, max_new=6)
+    gold = _gold(pcfg, params, spec, **kw)
+    bat = ContinuousBatcher(pcfg, params, faults="t1_d2h:1+",
+                            tier_fault_limit=2, **kw)
+    reqs = _reqs(pcfg, 4, plen=16, max_new=6)
+    _run(bat, reqs)
+    outs = _drain_all(reqs, timeout=10.0)
+    for r in reqs:
+        assert outs[r.rid] == (gold[r.rid], None)
+    st = bat.stats()
+    if st["tier_faults"] >= 2:
+        assert st["tier_disabled"] and bat._tiers is None
+    _check_allocators(bat)
+
+
+# --- allocator invariants --------------------------------------------------------------
+
+
+def test_allocator_check_consistency():
+    from repro.serve.prefix_cache import PageAllocator
+    a = PageAllocator(8)
+    pages = a.alloc(3)
+    a.incref(pages[:1])
+    a.check_consistency()
+    a.free(pages)
+    a.free(pages[:1])
+    a.check_consistency()
+    assert a.free_pages == 8
+    a._free.append(2)                         # corrupt: duplicate free
+    with pytest.raises(AssertionError):
+        a.check_consistency()
+
+
+def test_class_rank_table():
+    assert CLASS_RANK["latency"] > CLASS_RANK["standard"] > \
+        CLASS_RANK["batch"]
+    ev = TerminalEvent.rejected(5, "why")
+    err = ev.to_error([1, 2])
+    assert isinstance(err, RequestRejected)
+    assert err.rid == 5 and err.tokens == [1, 2]
