@@ -904,6 +904,103 @@ def bench_deadline_slo():
     RESULTS["deadline_slo"]["sla_hit_rate"] = round(sla_hit, 3)
 
 
+def bench_spec_decode_throughput():
+    """Speculative multi-token decode vs plain decode at equal pool, on
+    two workloads served by BOTH arms (the ratio is within-workload, so
+    admission/prefill overheads cancel):
+
+    - *repetitive*: motif prompts whose greedy continuation settles into
+      a cycle — the n-gram drafter commits most of the verify span per
+      round, so the speculative arm must win wall-clock (gated >= 1.5x
+      full mode).
+    - *adversarial*: novel random prompts — drafts are rejected, the
+      per-slot EWMA self-disables the drafter (failed probes back off
+      exponentially), and the speculative arm must stay within 10% of
+      plain (gated >= 0.9x full mode).
+
+    Output token streams are asserted bit-identical between arms on
+    every trial (tokens_equal=1).  Arms run back-to-back in pairs and
+    the gated ratios are the MEDIAN of per-pair ratios — single runs on
+    a noisy shared host swing +/-40%, far wider than either gate
+    margin, but paired runs share the host's slow phases and their
+    ratio is stable."""
+    import dataclasses
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    params = registry.init(cfg, 0)
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefill_chunk=8)
+    # probe grid of 8: the bench's requests are short enough that the
+    # default 16-step re-probe period would leave the drafter disabled
+    # for a third of the repetitive run.
+    scfg = dataclasses.replace(pcfg, speculate_k=8, speculate_probe=8)
+    max_new, max_seq, trials = (60, 128, 4) if SMOKE else (120, 256, 5)
+    # the adversarial arm runs longer: failed probes back off
+    # exponentially, so the fixed startup rounds plus O(log T) probes
+    # amortize toward the plain-decode floor with sequence length.
+    adv_new = 100 if SMOKE else 200
+
+    # repetitive: a motif prompt (seeded, model-independent construction)
+    # whose greedy continuation under this init reaches a fixed point
+    # within a few tokens; four identical slots keep the batch uniform.
+    r = np.random.default_rng(101)
+    motif = r.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    plen = int(r.integers(9, 16))
+    rep_prompts = [np.tile(motif, 5)[:plen].astype(np.int32)] * 4
+    rng = np.random.default_rng(7)
+    adv_prompts = [rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(9, 16))).astype(np.int32)
+                   for _ in range(4)]
+
+    def arm(acfg, prompts, mn=max_new):
+        bat = ContinuousBatcher(acfg, params, n_slots=4, max_seq=max_seq)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=mn)
+                for i, p in enumerate(prompts)]
+        prod = threading.Thread(
+            target=lambda: [bat.submit(r) for r in reqs])
+        t0 = time.perf_counter()
+        prod.start()
+        bat.run(len(reqs))
+        prod.join()
+        dt = time.perf_counter() - t0
+        return [drain(r) for r in reqs], dt, bat
+
+    # compile both programs outside the timed trials
+    arm(pcfg, rep_prompts[:2])
+    arm(scfg, rep_prompts[:2])
+
+    stats = {}
+    for wname, prompts, mn in (("rep", rep_prompts, max_new),
+                               ("adv", adv_prompts, adv_new)):
+        ratios, best_s = [], float("inf")
+        for _ in range(trials):
+            out_p, dt_p, bat_p = arm(pcfg, prompts, mn)
+            out_s, dt_s, bat_s = arm(scfg, prompts, mn)
+            assert out_s == out_p, \
+                f"spec_decode: {wname} outputs diverged from plain"
+            assert bat_s.n_pages == bat_p.n_pages, \
+                "spec_decode: arms ran with different pool sizes"
+            ratios.append(dt_p / dt_s)
+            best_s = min(best_s, dt_s)
+        total = 4 * mn
+        stats[wname] = (total / best_s, float(np.median(ratios)),
+                        bat_s.stats()["speculation"])
+    rep_speedup = stats["rep"][1]
+    adv_ratio = stats["adv"][1]
+    st = stats["rep"][2]
+    row("spec_decode_throughput", 4 * max_new / stats["rep"][0] * 1e6,
+        f"rep_tok_per_s={stats['rep'][0]:.0f};"
+        f"rep_speedup={rep_speedup:.2f};adv_ratio={adv_ratio:.2f};"
+        f"acceptance={st['accepted'] / max(st['drafted'], 1):.2f};"
+        f"verify_steps={st['verify_steps']};k=8;tokens_equal=1")
+    RESULTS["spec_decode_throughput"]["rep_speedup"] = round(rep_speedup, 3)
+    RESULTS["spec_decode_throughput"]["adv_ratio"] = round(adv_ratio, 3)
+    RESULTS["spec_decode_throughput"]["tokens_equal"] = 1
+
+
 # Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
 # workloads (fewer requests/lengths), so they write a separate
 # BENCH_serve_smoke.json — only same-mode snapshots are diffable.
@@ -912,7 +1009,8 @@ SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
               "serve_longprompt_dense", "serve_longprompt_paged",
               "bursty_admission", "serve_family_gemma3",
               "serve_family_int8", "prefix_hit_ttft", "prefix_capacity",
-              "host_tier_rehit", "spill_resume_latency", "deadline_slo")
+              "host_tier_rehit", "spill_resume_latency", "deadline_slo",
+              "spec_decode_throughput")
 
 
 def main(argv=None) -> None:
@@ -949,6 +1047,7 @@ def main(argv=None) -> None:
     bench_host_tier_rehit()
     bench_spill_resume_latency()
     bench_deadline_slo()
+    bench_spec_decode_throughput()
 
     out_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)),
@@ -1056,6 +1155,30 @@ def main(argv=None) -> None:
               f"sla={ds.get('sla_hit_rate')} <= "
               f"fifo={ds.get('fifo_hit_rate')}", flush=True)
         raise SystemExit(1)
+    # 9. speculative decode must pay for itself: >= 1.5x plain tokens/s
+    #    on the repetitive workload at equal pool, and never worse than
+    #    0.9x on the adversarial one (the drafter self-disables on low
+    #    acceptance).  Smoke runs are shorter (the cycle phase the
+    #    drafter exploits is a smaller fraction of each request) and
+    #    noisier, so the floors relax to 1.0x / 0.75x there.
+    sd = RESULTS.get("spec_decode_throughput", {})
+    if sd:
+        rep_floor, adv_floor = (1.0, 0.75) if SMOKE else (1.5, 0.9)
+        if sd.get("tokens_equal") != 1:
+            print("FATAL: speculative decode output diverged from "
+                  "plain greedy decode", flush=True)
+            raise SystemExit(1)
+        if sd.get("rep_speedup", 0) < rep_floor:
+            print(f"FATAL: speculative decode speedup "
+                  f"{sd.get('rep_speedup')}x < {rep_floor}x on the "
+                  f"repetitive workload at equal pool", flush=True)
+            raise SystemExit(1)
+        if sd.get("adv_ratio", 0) < adv_floor:
+            print(f"FATAL: speculative decode fell to "
+                  f"{sd.get('adv_ratio')}x < {adv_floor}x of plain "
+                  f"decode on the adversarial workload — self-disable "
+                  f"is not containing the verify overhead", flush=True)
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

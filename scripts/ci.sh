@@ -25,9 +25,12 @@ python -m pytest -x -q
 # does not admit strictly more slots than exclusive pages at equal pool,
 # if restoring an evicted prefix from the host tier is not >= 2x faster
 # than recomputing it, if the staged spill/restore engine is slower
-# than the per-page baseline it replaced, or if SLA scheduling does not
+# than the per-page baseline it replaced, if SLA scheduling does not
 # beat FIFO on the latency-class SLO hit-rate at equal throughput
-# (deadline_slo).
+# (deadline_slo), or if speculative decode (spec_decode_throughput)
+# fails its floors — repetitive-workload speedup, adversarial-workload
+# ratio (the self-disabling drafter must keep the overhead bounded),
+# or bit-identity of the speculative token streams vs plain decode.
 python -m benchmarks.run --smoke --serve
 
 # Chaos smoke (serve.resilience): the deterministic fault-injection

@@ -154,6 +154,34 @@ class ModelConfig:
     # serve.resilience.FaultPlan.  Overridable via the REPRO_FAULTS env
     # var (and REPRO_FAULT_SEED for the @p probability draws).
     fault_plan: str = ""
+    # -- speculative decode (paged mode only) --------------------------------------
+    # k-token self-speculative decode: an n-gram drafter proposes up to
+    # speculate_k tokens per slot from the slot's own history; ONE
+    # (k+1)-length verify call (mode="verify") scores the whole span
+    # (last committed token + drafts), and
+    # accepted tokens commit while rejected tails roll back by
+    # block-table swap (speculative KV lands in private scratch pages —
+    # never in shared/refcounted ones).  Output stays bit-identical to
+    # non-speculative greedy decode.  0 disables speculation.  NOTE:
+    # speculate_k also pads gemma3's ring table width (the verify span
+    # may clobber up to speculate_k extra ring positions), so it must be
+    # set at batcher construction, not toggled mid-flight.
+    speculate_k: int = 0
+    # history context the drafter requires: the trailing speculate_ngram
+    # tokens must ALL reappear earlier in the slot's history (prompt +
+    # generated) for a draft to fire.  Shorter matches are never used —
+    # on novel text they are single-token coincidences whose rejected
+    # drafts each cost a verify round.
+    speculate_ngram: int = 3
+    # per-slot acceptance-rate EWMA floor: a slot whose acceptance drops
+    # below this stops drafting (adversarial/low-entropy-free workloads
+    # then pay only the plain decode path).
+    speculate_min_accept: float = 0.3
+    # a self-disabled slot re-probes (drafts anyway) every Nth batcher
+    # step: text that turns repetitive mid-request (code, tables, greedy
+    # cycles) re-enables speculation via the EWMA instead of staying
+    # disabled forever.  0 makes the disable sticky for the request.
+    speculate_probe: int = 16
     embed_std: float = 0.02
 
     # -- derived -----------------------------------------------------------------

@@ -335,11 +335,16 @@ def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def _flash_decode_paged_kernel(*refs, scale: float, window: Optional[int],
-                               page: int, hkv: int, has_base: bool,
-                               quantized: bool):
+                               page: int, hkv: int, group: int, sq: int,
+                               has_base: bool, quantized: bool):
     """Refs: [pos, bt(, page_base)] prefetch, [q, k, v(, ks, vs)] inputs,
     o output, (m, l, acc) scratch — optional refs keyed by the static
-    ``has_base``/``quantized`` flags."""
+    ``has_base``/``quantized`` flags.
+
+    ``sq`` > 1 is the speculative-verify span: the q block carries
+    sq·group rows (query position-major), row rr belonging to query
+    position ``pos + rr // group`` — each gets its own causal band, so
+    one pass over the block table scores every position of the span."""
     n_pre = 3 if has_base else 2
     pos_ref = refs[0]
     pb_ref = refs[2] if has_base else None
@@ -364,7 +369,7 @@ def _flash_decode_paged_kernel(*refs, scale: float, window: Optional[int],
     # table entry jk, reconstructed by the caller — negative for slots
     # never written.  Flat layouts keep the static jk * page base.
     k_start = pb_ref[i // hkv, jk] if has_base else jk * page
-    active = k_start <= pos                           # skip future pages
+    active = k_start <= pos + (sq - 1)                # skip future pages
     if has_base:
         active &= k_start >= 0                        # skip unwritten slots
     if window is not None:
@@ -372,7 +377,7 @@ def _flash_decode_paged_kernel(*refs, scale: float, window: Optional[int],
 
     @pl.when(active)
     def _body():
-        q = q_ref[0].astype(jnp.float32) * scale      # (group, d)
+        q = q_ref[0].astype(jnp.float32) * scale      # (sq·group, d)
         k = k_ref[0, 0].astype(jnp.float32)           # (page, d)
         v = v_ref[0, 0].astype(jnp.float32)
         if quantized:
@@ -381,13 +386,16 @@ def _flash_decode_paged_kernel(*refs, scale: float, window: Optional[int],
             v = v * vs_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)       # (group, page)
+            preferred_element_type=jnp.float32)       # (sq·group, page)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        valid = kpos <= pos
+        # row rr of the block is query position pos + rr // group.
+        qpos = pos + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0) // group
+        valid = kpos <= qpos
         if has_base:
             valid &= kpos >= 0
         if window is not None:
-            valid &= kpos > pos - window
+            valid &= kpos > qpos - window
         s = jnp.where(valid, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -416,14 +424,19 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                                  scale: Optional[float] = None,
                                  interpret: Optional[bool] = None
                                  ) -> jnp.ndarray:
-    """Single-step decode attention over a *paged* KV cache.
+    """Decode attention over a *paged* KV cache.
 
-    q: (b, hq, 1, d); k_pages/v_pages: (n_pages, hkv, page, d) shared
+    q: (b, hq, sq, d) — sq == 1 is the plain decode step; sq > 1 is a
+    speculative *verify* span whose rows sit at positions
+    pos..pos+sq-1, each with its own causal band (one grid pass over
+    the block table scores all sq positions); k_pages/v_pages:
+    (n_pages, hkv, page, d) shared
     pools; block_tab: (b, n_blocks) int32 physical page per logical page
     (unallocated entries are clamped into [0, n_pages) — they are
     skipped/masked, but the index map still has to name a fetchable
-    page); pos: (b,) int32 decode positions.  ``window`` applies the
-    (pos - window, pos] band on *logical* positions.
+    page); pos: (b,) int32 position of the first query row.  ``window``
+    applies the per-row (qpos - window, qpos] band on *logical*
+    positions.
 
     ``page_base`` (optional, (b, n_blocks) int32): per-entry logical
     base position for ring-of-pages window groups, where table entry j
@@ -433,12 +446,10 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     ``k_scale_pages``/``v_scale_pages`` (optional, (n_pages, hkv, page,
     1) bf16): per-position scales for int8 pools — pages dequantize
     in VMEM right after the gather, so the dense bf16 view is never
-    materialized in HBM.  Returns (b, hq, 1, d), matching
+    materialized in HBM.  Returns (b, hq, sq, d), matching
     ``ref.paged_attention_ref``.
     """
     b, hq, sq, d = q.shape
-    if sq != 1:
-        raise ValueError(f"paged decode requires sq == 1, got {sq}")
     n_pages, hkv, page, _ = k_pages.shape
     if hq % hkv:
         raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
@@ -453,13 +464,17 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     n_blocks = block_tab.shape[1]
     bh = b * hkv
-    q3 = q[:, :, 0, :].reshape(b, hkv, group, d).reshape(bh, group, d)
+    rows = sq * group
+    # Fold (b, hq, sq, d) position-major into (bh, sq·group, d): block
+    # row rr belongs to query position rr // group, head group rr % group.
+    q3 = (q.reshape(b, hkv, group, sq, d).transpose(0, 1, 3, 2, 4)
+          .reshape(bh, rows, d))
     pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     bt = jnp.minimum(block_tab.astype(jnp.int32), n_pages - 1)
 
     kernel = functools.partial(
         _flash_decode_paged_kernel, scale=scale, window=window, page=page,
-        hkv=hkv, has_base=has_base, quantized=quantized)
+        hkv=hkv, group=group, sq=sq, has_base=has_base, quantized=quantized)
 
     n_pre = 3 if has_base else 2
 
@@ -469,7 +484,7 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     def _pmap(i, jk, *prefs, h=hkv):
         return (prefs[1][i // h, jk], i % h, 0, 0)
 
-    in_specs = [pl.BlockSpec((1, group, d), _qmap),
+    in_specs = [pl.BlockSpec((1, rows, d), _qmap),
                 # the paged gather: physical page picked by the block table.
                 pl.BlockSpec((1, 1, page, d), _pmap),
                 pl.BlockSpec((1, 1, page, d), _pmap)]
@@ -487,19 +502,20 @@ def flash_attention_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
         num_scalar_prefetch=n_pre,                    # pos, bt(, page_base)
         grid=(bh, n_blocks),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, group, d), _qmap),
+        out_specs=pl.BlockSpec((1, rows, d), _qmap),
         scratch_shapes=[
-            pltpu.VMEM((group, 1), jnp.float32),
-            pltpu.VMEM((group, 1), jnp.float32),
-            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.float32),
         ],
     )
 
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((bh, group, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, rows, d), q.dtype),
         interpret=interpret,
     )(*prefetch, *inputs)
 
-    return out.reshape(b, hq, d)[:, :, None, :]
+    return (out.reshape(b, hkv, sq, group, d).transpose(0, 1, 3, 2, 4)
+            .reshape(b, hq, sq, d))

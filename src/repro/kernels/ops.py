@@ -39,8 +39,10 @@ def paged_decode_attention(q, k_pages, v_pages, block_tab, pos, *,
                            page_base=None, k_scale_pages=None,
                            v_scale_pages=None,
                            use_pallas: bool = False, interpret: bool = True):
-    """Paged-KV decode attention: q (b,hq,1,d) against (n_pages, hkv,
-    page, d) pools gathered through (b, n_blocks) block tables.
+    """Paged-KV decode attention: q (b,hq,sq,d) against (n_pages, hkv,
+    page, d) pools gathered through (b, n_blocks) block tables.  sq == 1
+    is the plain decode step; sq > 1 is a speculative verify span at
+    positions pos..pos+sq-1, each row with its own causal band.
     ``page_base`` carries ring-of-pages logical bases (window-bounded
     groups); ``*_scale_pages`` dequantize int8 pools in-kernel."""
     if use_pallas:

@@ -65,12 +65,16 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         scale: Optional[float] = None) -> jnp.ndarray:
     """Paged-KV decode attention oracle (the obviously-correct gather path).
 
-    q: (b, hq, 1, d); k_pages/v_pages: (n_pages, hkv, page, d) — the shared
+    q: (b, hq, sq, d) — sq == 1 is a plain decode step; sq > 1 is a
+    speculative *verify* span whose rows sit at positions
+    pos..pos+sq-1 (each row gets its own causal band); k_pages/v_pages:
+    (n_pages, hkv, page, d) — the shared
     device page pool; block_tab: (b, n_blocks) int32 mapping each sequence's
     logical page index to a physical page (entries >= n_pages are treated
     as unallocated and may hold anything — they are masked, not read for
-    real positions); pos: (b,) int32 — the position being decoded (logical
-    positions <= pos are live).  ``page_base`` (b, n_blocks) overrides the
+    real positions); pos: (b,) int32 — the position of the FIRST query row
+    (logical positions <= pos + r are live for row r).  ``page_base``
+    (b, n_blocks) overrides the
     flat ``j * page`` logical base position per table entry (ring-of-pages
     window groups; negative = never written).  ``k_scale_pages`` /
     ``v_scale_pages`` (n_pages, hkv, page, 1) dequantize int8 pools.
@@ -100,10 +104,12 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                 + jnp.arange(page)[None, None, :]).reshape(b, S)
     else:
         kpos = jnp.broadcast_to(jnp.arange(S)[None, :], (b, S))
-    mask = (kpos <= pos[:, None]) & (kpos >= 0)       # (b, S)
+    qpos = pos[:, None] + jnp.arange(sq)              # (b, sq)
+    mask = (kpos[:, None, :] <= qpos[:, :, None]) \
+        & (kpos >= 0)[:, None, :]                     # (b, sq, S)
     if window is not None:
-        mask &= kpos > pos[:, None] - window
-    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+        mask &= kpos[:, None, :] > qpos[:, :, None] - window
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, vd)
     return out.astype(q.dtype)

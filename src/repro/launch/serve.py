@@ -68,6 +68,17 @@ def main(argv=None):
                     help="run under ServeSupervisor: watchdog heartbeat "
                          "+ journaled crash recovery on fatal step "
                          "faults (paged mode)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="speculative decode: n-gram drafter proposes up "
+                         "to K tokens/slot, one batched verify call "
+                         "scores them (paged mode only; output stays "
+                         "bit-identical to plain greedy decode)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="shorthand for --speculate-k 4")
+    ap.add_argument("--speculate-probe", type=int, default=-1,
+                    help="re-probe period for self-disabled drafter "
+                         "slots in steps (0 = sticky disable; default: "
+                         "config value)")
     ap.add_argument("--deadline-ms", type=float, default=0,
                     help="per-request deadline in ms (0 = none); "
                          "expired requests are cancelled, pages freed")
@@ -85,17 +96,24 @@ def main(argv=None):
     if args.host_tier_bytes and not args.prefix_cache:
         ap.error("--host-tier-bytes needs --prefix-cache (demotion is "
                  "keyed by the prefix index)")
+    speculate_k = args.speculate_k or (4 if args.speculate else 0)
     if (args.page_size or args.prefix_cache or args.prefill_exact
-            or args.host_tier_bytes):
+            or args.host_tier_bytes or speculate_k):
         import dataclasses
         page = args.page_size or cfg.kv_page_size
         if args.prefix_cache and not page:
             ap.error("--prefix-cache needs the paged batcher: pass "
                      "--page-size as well")
+        if speculate_k and not page:
+            ap.error("--speculate/--speculate-k needs the paged batcher "
+                     "(rollback swaps block tables): pass --page-size")
         kw = dict(kv_page_size=page, prefix_cache=args.prefix_cache,
                   prefill_exact=args.prefill_exact,
                   kv_host_tier_bytes=args.host_tier_bytes,
-                  kv_tier_snapshot=args.tier_snapshot)
+                  kv_tier_snapshot=args.tier_snapshot,
+                  speculate_k=speculate_k)
+        if args.speculate_probe >= 0:
+            kw["speculate_probe"] = args.speculate_probe
         if args.tier_restore_min >= 0:
             kw["tier_restore_min_tokens"] = args.tier_restore_min
         cfg = dataclasses.replace(cfg, **kw)
@@ -166,6 +184,14 @@ def main(argv=None):
             print(f"pages: shared {st['shared_pages']}, "
                   f"cow copies {st['cow_copies']}, "
                   f"pools {st['pools']}")
+        sp = st.get("speculation", {})
+        if sp.get("k"):
+            print(f"speculation: k={sp['k']}, drafted {sp['drafted']}, "
+                  f"accepted {sp['accepted']} "
+                  f"(rate {sp['acceptance_rate']:.2f}), "
+                  f"rolled back {sp['rolled_back']}, "
+                  f"verify steps {sp['verify_steps']}, "
+                  f"decode steps saved {sp['decode_steps_saved']}")
         if "tiers" in st:
             t = st["tiers"]
             print(f"kv tiers: T1 {t['t1_entries']} entries / "

@@ -112,11 +112,17 @@ class CacheLayout:
         return all(g.shareable for g in self.groups)
 
     def n_blocks(self, name: str, max_seq: int) -> int:
-        """Block-table width for a group."""
+        """Block-table width for a group.  Ring groups pad their window
+        by ``cfg.speculate_k``: a speculative verify span writes up to
+        speculate_k positions past ``pos``, and the extra slots keep
+        every ring page it clobbers strictly outside every span row's
+        window band (the clobbered page's last position is at most
+        ``pos - window - 1``)."""
         g = self.group(name)
         flat = _ceil_div(max_seq, self.page)
         if g.ring:
-            return min(ring_blocks(g.window, self.page), flat)
+            w = g.window + max(int(getattr(self.cfg, "speculate_k", 0)), 0)
+            return min(ring_blocks(w, self.page), flat)
         return flat
 
     def blocks_for(self, name: str, n_tokens: int, max_seq: int) -> int:

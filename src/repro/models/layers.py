@@ -510,7 +510,8 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
                           block_tab: jnp.ndarray, pos: jnp.ndarray,
                           ring: bool = False,
                           last_idx: Optional[jnp.ndarray] = None,
-                          cache_offset: Optional[jnp.ndarray] = None):
+                          cache_offset: Optional[jnp.ndarray] = None,
+                          verify: bool = False):
     """Pre-norm attention against a *paged* KV cache.
 
     x: (b, s, d) — s == 1 is a decode step, s > 1 a prefill chunk whose
@@ -544,8 +545,14 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
     exactly: a prefill chunk (s > 1) attends its own positions at full
     precision (dense prefill never rounds within-prompt K/V through the
     cache), while a decode step (s == 1) attends the pool-rounded values
-    (dense decode reads the quantized/bf16 cache).  Returns
-    (y, new_pages).
+    (dense decode reads the quantized/bf16 cache).
+
+    ``verify=True`` (speculative decode): s == k rows behave like k
+    *sequential decode steps* scored at once — own K/V is pool-rounded
+    (each draft token's KV would have been read back through the cache
+    had it been decoded one step at a time) and the flash kernel runs at
+    sq == k, so accepted tokens are bit-identical to non-speculative
+    greedy decode.  Returns (y, new_pages).
     """
     theta = theta if theta is not None else cfg.rope_theta
     b, s, d = x.shape
@@ -603,12 +610,19 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
 
     # --- read ------------------------------------------------------------------
     page_base = _ring_page_base(pos, page, n_blocks) if ring else None
-    if cfg.decode_flash and s == 1 and cache_offset is None:
-        # write-then-read through the block-table kernel.
+    if cfg.decode_flash and (s == 1 or verify) and cache_offset is None:
+        # write-then-read through the block-table kernel.  The verify
+        # span's writes land before the read, so ring bases key off the
+        # span END — entries the span wrote hold NEW logical pages (the
+        # ring table width is padded by speculate_k, so every clobbered
+        # old page is strictly out-of-window for every row).  At s == 1
+        # this reduces to the plain base-from-pos.
         from ..kernels.flash_attention import flash_attention_decode_paged
+        flash_base = (_ring_page_base(pos + (s - 1), page, n_blocks)
+                      if ring else None)
         o = flash_attention_decode_paged(
             q, new_pages["k"], new_pages["v"], block_tab, pos,
-            window=window, page_base=page_base,
+            window=window, page_base=flash_base,
             k_scale_pages=new_pages.get("k_scale"),
             v_scale_pages=new_pages.get("v_scale"))
     else:
@@ -625,7 +639,7 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
                                 q.dtype)
             vd = _kv_dequantize(gather(pages["v"]), gather(pages["v_scale"]),
                                 q.dtype)
-            if s == 1:                               # pool-rounded own k/v
+            if s == 1 or verify:                     # pool-rounded own k/v
                 kl = _kv_dequantize(kq, ks, q.dtype).transpose(0, 2, 1, 3)
                 vl = _kv_dequantize(vq, vs, q.dtype).transpose(0, 2, 1, 3)
             else:
@@ -633,7 +647,7 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
         else:
             kd = gather(pages["k"]).astype(q.dtype)
             vd = gather(pages["v"]).astype(q.dtype)
-            if s == 1:
+            if s == 1 or verify:
                 kl = k.astype(pk.dtype).astype(q.dtype)
                 vl = v.astype(pv.dtype).astype(q.dtype)
             else:
@@ -794,7 +808,8 @@ def mla_apply(cfg, p, x, *, cache=None, pos=None):
 def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
                     block_tab: jnp.ndarray, pos: jnp.ndarray,
                     last_idx: Optional[jnp.ndarray] = None,
-                    cache_offset: Optional[jnp.ndarray] = None):
+                    cache_offset: Optional[jnp.ndarray] = None,
+                    verify: bool = False):
     """MLA absorbed attention against a *paged* compressed latent cache.
 
     The pages hold the latent rows themselves — ``c_kv`` pages of shape
@@ -804,7 +819,10 @@ def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
     page-granular).  x: (b, s, d) — s == 1 decode, s > 1 a prefill
     chunk at positions pos..pos+s-1.  Reads mirror the dense rounding:
     a chunk attends its own rows at full precision, decode attends the
-    pool-rounded (bf16) rows.  Returns (y, new_pages).
+    pool-rounded (bf16) rows.  ``verify=True`` (speculative decode):
+    the s == k span behaves like k sequential decode steps — own latent
+    rows are pool-rounded so accepted tokens stay bit-identical to
+    non-speculative greedy decode.  Returns (y, new_pages).
     """
     b, s, d = x.shape
     hq = cfg.n_heads
@@ -847,7 +865,7 @@ def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
     S = n_blocks * page
     cc = cp[bt].reshape(b, S, lora).astype(F32)
     cr = rpool[bt].reshape(b, S, rp).astype(F32)
-    if s == 1:                                       # pool-rounded own row
+    if s == 1 or verify:                             # pool-rounded own rows
         cl = c_kv.astype(cp.dtype).astype(F32)
         rl = k_rope.astype(rpool.dtype).astype(F32)
     else:

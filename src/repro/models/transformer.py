@@ -46,15 +46,16 @@ def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
                 block_tab: Optional[jnp.ndarray] = None,
                 ring: bool = False,
                 cache_offset: Optional[jnp.ndarray] = None):
-    if mode in ("decode", "chunk"):
+    if mode in ("decode", "chunk", "verify"):
         if block_tab is not None:
             return L.attention_apply_paged(
                 cfg, p, x, window=window, theta=theta, pages=cache,
                 block_tab=block_tab, pos=pos, ring=ring,
                 last_idx=last_pos if mode == "chunk" else None,
-                cache_offset=cache_offset if mode == "chunk" else None)
-        if mode == "chunk":
-            raise NotImplementedError("chunk mode requires a paged cache")
+                cache_offset=cache_offset if mode == "chunk" else None,
+                verify=mode == "verify")
+        if mode in ("chunk", "verify"):
+            raise NotImplementedError(f"{mode} mode requires a paged cache")
         return L.attention_apply(cfg, p, x, window=window, theta=theta,
                                  cache=cache, pos=pos)
     y, _ = L.attention_apply(cfg, p, x, window=window, theta=theta)
@@ -95,13 +96,14 @@ def _attn_block(cfg, p, x, *, window, theta, cache, pos, mode,
 
 def _mla_block(cfg, p, x, *, cache, pos, mode, cache_len=None,
                block_tab=None, last_pos=None, cache_offset=None):
-    if block_tab is not None and mode in ("decode", "chunk"):
+    if block_tab is not None and mode in ("decode", "chunk", "verify"):
         return L.mla_apply_paged(
             cfg, p, x, pages=cache, block_tab=block_tab, pos=pos,
             last_idx=last_pos if mode == "chunk" else None,
-            cache_offset=cache_offset if mode == "chunk" else None)
-    if mode == "chunk":
-        raise NotImplementedError("chunk mode requires a paged cache")
+            cache_offset=cache_offset if mode == "chunk" else None,
+            verify=mode == "verify")
+    if mode in ("chunk", "verify"):
+        raise NotImplementedError(f"{mode} mode requires a paged cache")
     if mode == "decode":
         return L.mla_apply(cfg, p, x, cache=cache, pos=pos)
     y, _ = L.mla_apply(cfg, p, x)
@@ -197,7 +199,8 @@ def gemma3_blocks(cfg):
         # group.  Local (sliding-window) layers run the ring-of-pages
         # layout — their page count stays window-bounded — while global
         # layers use the flat growing layout.
-        paged = block_tab is not None and mode in ("decode", "chunk")
+        paged = block_tab is not None and mode in ("decode", "chunk",
+                                                   "verify")
         local_caches, global_caches = [], []
         for i in range(per):
             pi = _tree_idx(p, i)
@@ -528,7 +531,8 @@ def _scan_blocks(cfg, apply, blocks_p, x, cache, pos, mode, cache_len,
 
     body = _remat(cfg, body)
     n = jax.tree.leaves(blocks_p)[0].shape[0]
-    caches = cache if (cache is not None and mode in ("decode", "chunk")) \
+    caches = cache if (cache is not None
+                       and mode in ("decode", "chunk", "verify")) \
         else jnp.zeros((n, 1))
     x, new_cache = lax.scan(body, x, (blocks_p, caches))
     if mode == "train":
@@ -559,6 +563,14 @@ def forward(cfg, params, batch, mode: str = "train",
     cache (x at positions pos..pos+s-1), enabling chunked prefill
     interleaved with decode.  Returns the updated pools as the new cache.
 
+    ``mode="verify"`` (speculative decode): like a batched k-token
+    decode step — tokens (b, k) at positions pos..pos+k-1 against the
+    paged cache, returning FULL (b, k, Vp) logits (no last-position
+    gather) so the caller can greedily score every span position in one
+    call.  Own-K/V reads are pool-rounded (each position reads exactly
+    what sequential decode would have), keeping accepted speculative
+    tokens bit-identical to non-speculative greedy decode.
+
     ``cache_offset`` (chunk mode, prefix cache): (b,) int32 — the cache
     is *read-only below this position*.  A prefix-cache hit starts its
     catch-up prefill at the divergence point with the matched prefix
@@ -588,8 +600,8 @@ def forward(cfg, params, batch, mode: str = "train",
         if isinstance(cache, dict) and set(cache) == {"kv"}:
             cache = cache["kv"]
             rewrap_kv = True
-    if mode == "chunk" and block_tab is None:
-        raise NotImplementedError("chunk mode requires a paged cache")
+    if mode in ("chunk", "verify") and block_tab is None:
+        raise NotImplementedError(f"{mode} mode requires a paged cache")
 
     fam = _family(cfg)
     blocks_p = params["blocks"]

@@ -99,6 +99,32 @@ through to plain prefill; short preempted sequences park as
 through suppressed-output decode steps) — below the crossover, prefill
 FLOPs are cheaper than staging pages through host RAM.
 
+Speculative multi-token decode (``cfg.speculate_k``)
+----------------------------------------------------
+Paged mode can retire several tokens per jitted call without a second
+model: a *self-speculative n-gram drafter* proposes up to ``speculate_k``
+tokens per slot by suffix-matching the slot's own history (prompt +
+generated tokens), and ONE batched ``(speculate_k + 1)``-length *verify*
+call — the chunked-prefill forward path with per-row causal masking and
+fused greedy argmax — scores every proposed position at once.  The
+longest prefix of drafts agreeing with the model's own argmax commits
+(always at least one token: a slot with no draft commits exactly 1, so
+mixed spec/non-spec batches share the single compiled program); the
+rejected tail rolls back by *block-table swap*: inside the verify jit,
+every drafting slot's span pages are repointed at freshly allocated
+private scratch pages (old contents copied in, both from padded index
+arrays planned on the host), so speculative KV writes can never touch a
+shared/refcounted page and the batcher's device table is never mutated
+by speculation — commit scatters the scratch pages into the slot's page
+list and the table, rollback just frees them (the table never saw
+them).  Scratch lives entirely within one ``step()`` call, so
+preemption, SLA expiry, and crash recovery never observe it.  Greedy
+verification accepts exactly the tokens greedy decode would have
+produced, so the output token stream is bit-identical to non-speculative
+decode; a per-slot acceptance-rate EWMA stops drafting when it drops
+below ``speculate_min_accept`` (adversarial workloads degrade to the
+plain decode path instead of paying useless verify FLOPs).
+
 Chunked prefill
 ---------------
 Dense admission prefils a full ``n_slots``-row padded batch per pow2
@@ -115,6 +141,7 @@ instead of one full prefill — bounded inter-token p99.
 
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import functools
@@ -137,7 +164,8 @@ from .kv_tiers import KVTierManager, SnapshotCorruptError, StagedTransferEngine
 from .prefix_cache import PageAllocator, PrefixIndex
 from .resilience import (BatcherFault, FaultPlan, InjectedFault, StallFault,
                          TerminalEvent, class_rank)
-from .serve_loop import make_chunk_prefill_step, make_paged_decode_step
+from .serve_loop import (make_chunk_prefill_step, make_paged_decode_step,
+                         make_spec_verify_step)
 
 _MIN_BUCKET = 8            # smallest prefill bucket (pad-to-power-of-two)
 _MIN_CHUNK = 16            # smallest auto-selected prefill chunk
@@ -295,6 +323,10 @@ class _Preempted:
     # replay pushes still owed suppression when the slot was preempted
     # MID-replay (tokens beyond ``pos`` already reached the consumer).
     skip: int = 0
+    # the slot's token history (prompt + generated) parked for the
+    # speculative drafter; recompute-mode records leave it empty (the
+    # replay rebuilds it token by token).
+    hist: List[int] = dataclasses.field(default_factory=list)
 
 
 class ContinuousBatcher:
@@ -361,6 +393,15 @@ class ContinuousBatcher:
         self.transfer_retries = int(transfer_retries)
         self.tier_fault_limit = int(tier_fault_limit)
         self._ewma_step_s = 0.0      # smoothed decode-step wall time
+        self._ewma_step_tok = 0.0    # smoothed tokens RETIRED per step —
+        # the load-shedding delay model divides by this, not by
+        # n_slots: partially filled batches and speculative multi-token
+        # commits both move real throughput away from 1 tok/slot/step.
+        # speculative-decode counters (stats()["speculation"]).
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_rolled_back = 0
+        self.spec_verify_steps = 0
         # supervisor wiring (ServeSupervisor sets these).
         self._heartbeat = None
         self._supervised = False
@@ -506,11 +547,39 @@ class ContinuousBatcher:
             self._step = make_paged_decode_step(cfg, max_seq, self.page_size)
             self._chunk_fn = make_chunk_prefill_step(cfg, self.chunk,
                                                      max_seq, self.page_size)
+            # speculative decode (paged only: rollback needs the block
+            # tables).  History/acceptance state exists even at k=0 so
+            # the bookkeeping paths stay branch-free.
+            self.speculate_k = max(int(cfg.speculate_k), 0)
+            self.speculate_ngram = max(int(cfg.speculate_ngram), 1)
+            self.speculate_min_accept = float(cfg.speculate_min_accept)
+            self.speculate_probe = max(int(cfg.speculate_probe), 0)
+            self._history: List[List[int]] = [[] for _ in range(n_slots)]
+            self._accept_ewma = [1.0] * n_slots
+            # re-probe schedule for self-disabled drafter slots: next
+            # step allowed to probe, and the current (exponentially
+            # backed-off) gap between failed probes.
+            self._probe_at = [0] * n_slots
+            self._probe_gap = [0] * n_slots
+            # per-slot n-gram position index: ngram tuple -> sorted
+            # positions of its occurrences in the slot's history, built
+            # incrementally (_ng_done = positions indexed so far) so a
+            # draft lookup is O(log occurrences) instead of an O(n)
+            # backward scan every step — on novel text the drafter
+            # never fires, so without the index the scan cost would
+            # grow with the sequence while returning nothing.
+            self._ng_idx: List[Dict[Tuple[int, ...], List[int]]] = \
+                [{} for _ in range(n_slots)]
+            self._ng_done = [0] * n_slots
+            if self.speculate_k:
+                self._verify = make_spec_verify_step(
+                    cfg, self.speculate_k + 1, max_seq, self.page_size)
         else:
             self.prefix_cache = False
             self._prefix = None
             self._tiers = None
             self._xfer = None
+            self.speculate_k = 0     # dense path: no block-table rollback
             cache_d = registry.cache_decls(cfg, 1, max_seq)
             one = PP.init_params(cache_d)  # zeros (init=zeros decls)
             self.cache = jax.tree.map(
@@ -599,6 +668,19 @@ class ContinuousBatcher:
         s["cow_copies"] = self.cow_copies
         s["prefix_cache"] = self.prefix_cache
         s["transfers"] = self._xfer.stats()
+        # every accepted draft token is one decode step the slot skipped;
+        # rolled_back counts draft tokens whose speculative KV was
+        # discarded by block-table rollback.
+        s["speculation"] = {
+            "k": self.speculate_k,
+            "drafted": self.spec_drafted,
+            "accepted": self.spec_accepted,
+            "rolled_back": self.spec_rolled_back,
+            "acceptance_rate": (self.spec_accepted
+                                / max(self.spec_drafted, 1)),
+            "verify_steps": self.spec_verify_steps,
+            "decode_steps_saved": self.spec_accepted,
+        }
         if self._tiers is not None:
             s["tiers"] = {**self._tiers.stats(),
                           "recompute_resumes": self.recompute_resumes}
@@ -972,6 +1054,15 @@ class ContinuousBatcher:
         a.next_chunk += 1
         if final:
             self._admitting.popleft()
+            # drafter history = every token the model has consumed
+            # (prompt + first sampled token); invariant len == pos + 1.
+            self._history[a.slot] = \
+                [int(t) for t in a.req.prompt] + [int(tok0)]
+            self._accept_ewma[a.slot] = 1.0
+            self._probe_at[a.slot] = 0
+            self._probe_gap[a.slot] = 0
+            self._ng_idx[a.slot].clear()
+            self._ng_done[a.slot] = 0
             if a.resume is not None:
                 # first token already reached the consumer before the
                 # preemption: arm the suppressed-output replay instead.
@@ -1030,6 +1121,7 @@ class ContinuousBatcher:
             self._slot_nshared[name][slot] = 0
             self.block_tab[name] = self.block_tab[name].at[slot].set(
                 self.n_pages[name])
+        self._history[slot] = []
 
     # -- lazy decode growth + preemption ------------------------------------------------
 
@@ -1088,7 +1180,8 @@ class ContinuousBatcher:
                     last_tok=self._host_last_tok[slot],
                     remaining=self._host_remaining[slot],
                     data=data, counts=counts, seq=self._slot_seq[slot],
-                    shared=shared, skip=self._replay_skip[slot]))
+                    shared=shared, skip=self._replay_skip[slot],
+                    hist=list(self._history[slot])))
                 self._replay_skip[slot] = 0
                 self.active = self.active.at[slot].set(False)
                 self._slot_req[slot] = None
@@ -1271,6 +1364,12 @@ class ContinuousBatcher:
             self._host_last_tok[slot] = rec.last_tok
             self._host_remaining[slot] = rec.remaining
             self._replay_skip[slot] = rec.skip
+            self._history[slot] = list(rec.hist)
+            self._accept_ewma[slot] = 1.0
+            self._probe_at[slot] = 0
+            self._probe_gap[slot] = 0
+            self._ng_idx[slot].clear()
+            self._ng_done[slot] = 0
             self.resumes += 1
             resumed += 1
         return resumed
@@ -1349,6 +1448,12 @@ class ContinuousBatcher:
         self._host_remaining = [0] * n_slots
         self._slot_seq = [0] * n_slots
         self._replay_skip = [0] * n_slots
+        self._history = [[] for _ in range(n_slots)]
+        self._accept_ewma = [1.0] * n_slots
+        self._probe_at = [0] * n_slots
+        self._probe_gap = [0] * n_slots
+        self._ng_idx = [{} for _ in range(n_slots)]
+        self._ng_done = [0] * n_slots
         self._admitting.clear()
         self._preempted = []
 
@@ -1574,11 +1679,24 @@ class ContinuousBatcher:
         t += sum(rec.remaining for rec in self._preempted)
         return t
 
+    def _note_rate(self, dt: float, toks: int) -> None:
+        """Fold one decode/verify step into the smoothed throughput
+        model: wall time AND tokens actually retired (a speculative
+        step commits several per slot; a half-empty batch commits fewer
+        than n_slots)."""
+        self._ewma_step_s = (dt if self._ewma_step_s == 0.0
+                             else 0.8 * self._ewma_step_s + 0.2 * dt)
+        self._ewma_step_tok = (float(toks) if self._ewma_step_tok == 0.0
+                               else 0.8 * self._ewma_step_tok + 0.2 * toks)
+
     def _projected_delay_ms(self) -> float:
         """Projected queueing delay for a new admission: backlog tokens
-        amortized over the slots, at the smoothed step time."""
+        at the smoothed measured throughput (tokens retired per step,
+        NOT steps x n_slots — the old per-step model undercounted when
+        slots sat empty and overcounts under speculative multi-token
+        commits)."""
         return (self._ewma_step_s * 1e3
-                * self._backlog_tokens() / max(self.n_slots, 1))
+                * self._backlog_tokens() / max(self._ewma_step_tok, 1.0))
 
     def admit(self) -> int:
         """Fill free slots: resume preempted requests first, then pop the
@@ -1668,6 +1786,327 @@ class ContinuousBatcher:
             n += 1
         return n
 
+    # -- speculative decode (draft / verify / commit-or-rollback) ----------------------
+
+    def _draft(self, slot: int) -> List[int]:
+        """Self-speculative n-gram draft for one slot: find the most
+        recent earlier occurrence of the history's trailing
+        ``speculate_ngram``-gram and propose the tokens that followed
+        it.  No
+        second model — repetitive continuations (code, templated text,
+        greedy cycles) hit; novel text simply returns no draft.  A slot
+        whose acceptance EWMA fell below ``speculate_min_accept`` stops
+        drafting (self-disable) but *re-probes* after ``speculate_probe``
+        steps — a probe that accepts well re-enables speculation (text
+        that turned repetitive mid-request, e.g. a greedy cycle settling
+        in), while failed probes back off exponentially so adversarial
+        workloads pay a vanishing verify overhead."""
+        probing = self._accept_ewma[slot] < self.speculate_min_accept
+        if probing and not (
+                self.speculate_probe
+                and self.steps >= self._probe_at[slot]
+                and self.steps % self.speculate_probe == 0):
+            # probes only fire on the global step grid so several
+            # disabled slots share one verify round instead of each
+            # paying their own.
+            return []
+        cap = min(self.speculate_k, self._host_remaining[slot] - 1)
+        if cap <= 0:
+            return []
+        hist = self._history[slot]
+        n = len(hist)
+        # the FULL trailing speculate_ngram must match — shorter matches
+        # on novel text are overwhelmingly single-token coincidences
+        # whose drafts get rejected, and each one burns a full-priced
+        # verify round before the EWMA can learn anything.  Repetitive
+        # text reaches an ngram-length repeat within a few tokens of the
+        # cycle starting, so requiring the full context costs it at most
+        # a round or two of onset.
+        ng = self.speculate_ngram
+        if n > ng:
+            # extend the incremental position index over the tokens
+            # appended since the last call (the index is cleared
+            # whenever the history is replaced: admission, resume,
+            # recovery), then look the trailing ngram up.
+            idx = self._ng_idx[slot]
+            done = self._ng_done[slot]
+            if done > n - ng:
+                idx.clear()
+                done = 0
+            for j in range(done, n - ng):
+                idx.setdefault(tuple(hist[j:j + ng]), []).append(j)
+            self._ng_done[slot] = max(done, n - ng)
+            posns = idx.get(tuple(hist[n - ng:]))
+            if posns:
+                # most recent occurrence whose continuation fills the
+                # WHOLE span (j + ng + cap <= n) — an occurrence near
+                # the history end (periodic text: every position
+                # matches) only supplies a truncated draft.  Short
+                # drafts are not proposed at all: the verify span costs
+                # the same k+1 positions regardless, so a 1-2 token
+                # draft can't pay for its round.
+                i = bisect.bisect_right(posns, n - ng - cap) - 1
+                if i >= 0:
+                    j = posns[i]
+                    return hist[j + ng:j + ng + cap]
+        if probing:
+            # the probe asked "has the text become draftable?" and the
+            # scan answered no — consume the probe and back off just
+            # like a failed round, except this one cost nothing.
+            # Without this, adversarial text keeps probe_at pinned at
+            # its last value until a stray n-gram match appears, and
+            # the match fires a full-priced verify round every time.
+            self._probe_gap[slot] = max(2 * self._probe_gap[slot],
+                                        self.speculate_probe // 2, 1)
+            self._probe_at[slot] = self.steps + self._probe_gap[slot]
+        return []
+
+    def _collect_drafts(self) -> Dict[int, List[int]]:
+        """Drafts for every decoding slot; an empty dict sends the step
+        down the plain decode path.  The verify span statically writes
+        ``speculate_k + 1`` positions per ACTIVE slot (pad rows included),
+        so the whole batch must satisfy ``pos + speculate_k <= max_seq -
+        2`` — any slot that close to the end forces a plain step (its
+        final tokens aren't worth speculating anyway)."""
+        lim = self.max_seq - 2 - self.speculate_k
+        drafts: Dict[int, List[int]] = {}
+        for i, r in enumerate(self._slot_req):
+            if r is None:
+                continue
+            if self._host_pos[i] > lim:
+                return {}
+            d = self._draft(i)
+            if d:
+                drafts[i] = d
+        return drafts
+
+    def _spec_setup(self, drafts: Dict[int, List[int]]):
+        """Plan the scratch redirection for every drafting slot's
+        verify span — freshly allocated private scratch pages (old
+        contents copied in) so speculative KV writes can never touch a
+        shared/refcounted page or a CoW boundary.  HOST-ONLY: the copy
+        and table swap execute *inside* the verify jit from the padded
+        index arrays built here, so the batcher's own device table is
+        never mutated by speculation and rollback costs nothing.
+
+        Per slot and group, the span covers logical pages
+        ``pos // page .. (pos + k) // page`` (k = speculate_k; the span
+        writes positions pos..pos+k).  Records are ``(group, logical,
+        entry, old_page | None, scratch_page)``; entries without an
+        allocated page yet record ``old = None`` (nothing to copy).  A
+        slot whose scratch allocation fails simply drops its draft —
+        speculation never preempts and never backpressures; ``drafts``
+        is pruned in place.
+
+        Returns ``(swaps, xfer)`` where xfer is the 5-tuple of padded
+        per-group arrays ``(copy_src, copy_dst, swap_rows, swap_cols,
+        swap_vals)`` with fixed length (compile-stable): copy padding
+        points dst at ``n_pages`` (scatter-dropped) and swap padding
+        points rows at ``n_slots`` (ditto)."""
+        k_span = self.speculate_k + 1
+        swaps: Dict[int, List[Tuple[str, int, int, Optional[int], int]]] = {}
+        for slot in list(drafts):
+            pos = self._host_pos[slot]
+            recs: List[Tuple[str, int, int, Optional[int], int]] = []
+            ok = True
+            for g in self.layout.groups:
+                name = g.name
+                nb = self.n_blocks[name]
+                pages = self._slot_pages[name][slot]
+                for l in range(pos // self.page_size,
+                               (pos + k_span - 1) // self.page_size + 1):
+                    j = l % nb if g.ring else l
+                    if j >= nb:          # flat span past the table —
+                        continue         # impossible under the pos gate
+                    got = self._alloc_evict(name, 1)
+                    if got is None:
+                        ok = False
+                        break
+                    old = pages[j] if j < len(pages) else None
+                    recs.append((name, l, j, old, got[0]))
+                if not ok:
+                    break
+            if not ok:       # dry pool: free grabbed scratch, drop draft
+                for name, _, _, _, scr in recs:
+                    self._alloc[name].free([scr])
+                del drafts[slot]
+                continue
+            swaps[slot] = recs
+        cap = self.n_slots * ((k_span - 1) // self.page_size + 2)
+        copy_src, copy_dst = {}, {}
+        rows, cols, vals = {}, {}, {}
+        fill = {}
+        for g in self.layout.groups:
+            copy_src[g.name] = np.zeros(cap, np.int32)
+            copy_dst[g.name] = np.full(cap, self.n_pages[g.name], np.int32)
+            rows[g.name] = np.full(cap, self.n_slots, np.int32)
+            cols[g.name] = np.zeros(cap, np.int32)
+            vals[g.name] = np.zeros(cap, np.int32)
+            fill[g.name] = 0
+        for slot, recs in swaps.items():
+            for name, _, j, old, scr in recs:
+                i = fill[name]
+                fill[name] = i + 1
+                rows[name][i] = slot
+                cols[name][i] = j
+                vals[name][i] = scr
+                if old is not None:
+                    copy_src[name][i] = old
+                    copy_dst[name][i] = scr
+        self._note_peak()
+        return swaps, (copy_src, copy_dst, rows, cols, vals)
+
+    def _spec_unwind(self, swaps) -> None:
+        """Abort path (injected verify fault / jit failure): free every
+        scratch page so the allocator stays consistent for
+        fail_inflight/recover.  The device table was never touched (the
+        swap lives inside the failed jit call), so there is nothing to
+        restore."""
+        for _, recs in swaps.items():
+            for name, _, _, _, scr in recs:
+                self._alloc[name].free([scr])
+
+    def _spec_resolve(self, swaps, commit: np.ndarray) -> None:
+        """Commit-or-rollback by block-table swap.  Pages holding
+        committed positions (logical <= page of ``pos + commit - 1``)
+        swap their scratch page into the slot's page list AND the device
+        table (the old page, if any, is freed); pages beyond simply free
+        the scratch — the device table never saw them.  A committed page
+        may still carry rejected rows past the commit point — those
+        positions are causally masked on every read until sequential
+        decode overwrites them."""
+        updates: Dict[str, List[Tuple[int, int, int]]] = {}
+        for slot, recs in swaps.items():
+            c = int(commit[slot])
+            last_page = (self._host_pos[slot] + c - 1) // self.page_size
+            for name, l, j, old, scr in recs:
+                pages = self._slot_pages[name][slot]
+                if c > 0 and l <= last_page:           # commit
+                    if j < len(pages):
+                        if old is not None:
+                            self._alloc[name].free([old])
+                        pages[j] = scr
+                    else:
+                        assert j == len(pages)
+                        pages.append(scr)
+                    updates.setdefault(name, []).append((slot, j, scr))
+                else:                                  # rollback (free)
+                    self._alloc[name].free([scr])
+        self._scatter_tab(updates)
+
+    def _scatter_tab(self, updates: Dict[str, List[Tuple[int, int, int]]]
+                     ) -> None:
+        """One batched block-table entry scatter per group."""
+        for name, items in updates.items():
+            self.block_tab[name] = self.block_tab[name].at[
+                np.asarray([s for s, _, _ in items], np.int32),
+                np.asarray([j for _, j, _ in items], np.int32)].set(
+                np.asarray([v for _, _, v in items], np.int32))
+
+    def _spec_step(self, drafts: Dict[int, List[int]], swaps,
+                   xfer) -> int:
+        """One batched draft-verify-commit step covering ALL active
+        slots: drafting slots feed [last_tok, d_1..d_n, pad...], the
+        rest feed [last_tok, pad...] (n_draft = 0 -> commit exactly 1 =
+        plain decode), so mixed batches share one compiled program.
+        Commit/rollback bookkeeping mirrors ``step()`` but advances
+        every host mirror by the per-slot commit count."""
+        k = self.speculate_k + 1
+        n = self.n_slots
+        tokens = np.zeros((n, k), np.int32)
+        n_draft = np.zeros((n,), np.int32)
+        for i, r in enumerate(self._slot_req):
+            if r is None:
+                continue
+            tokens[i, 0] = self._host_last_tok[i]
+            d = drafts.get(i, ())
+            tokens[i, 1:1 + len(d)] = d
+            tokens[i, 1 + len(d):] = tokens[i, len(d)]   # pad (masked)
+            n_draft[i] = len(d)
+        t0 = time.monotonic()
+        try:
+            # injected verify fault fires AFTER scratch setup — the
+            # unwind below must leave the allocator consistent.
+            self._fault.check("verify")
+            copy_src, copy_dst, rows, cols, vals = xfer
+            (self.pools, self.last_tok, self.pos, self.remaining,
+             self.active, out) = self._verify(
+                self.params, self.pools, self.block_tab,
+                jnp.asarray(tokens), jnp.asarray(n_draft),
+                self.pos, self.remaining, self.active,
+                copy_src, copy_dst, rows, cols, vals)
+        except Exception as e:
+            self._spec_unwind(swaps)
+            raise BatcherFault(e) from e
+        dt = time.monotonic() - t0
+        out = np.asarray(out)                  # the ONLY per-step transfer
+        preds, commit, finished = out[:k], out[k], out[k + 1]
+        self._spec_resolve(swaps, commit)
+        done = 0
+        committed = 0
+        for i, r in enumerate(self._slot_req):
+            if r is None:
+                continue
+            c = int(commit[i])
+            for t in range(c):
+                tok = int(preds[t, i])
+                if self._replay_skip[i] > 0:
+                    self._replay_skip[i] -= 1
+                else:
+                    r.out.Push(tok)
+                self._history[i].append(tok)
+            self._host_last_tok[i] = int(preds[c - 1, i])
+            self._host_pos[i] += c
+            self._host_remaining[i] -= c
+            committed += c
+            nd = int(n_draft[i])
+            if nd:
+                acc = c - 1
+                self.spec_drafted += nd
+                self.spec_accepted += acc
+                self.spec_rolled_back += nd - acc
+                floor = self.speculate_min_accept
+                if self._accept_ewma[i] < floor:
+                    # probe round: re-enable only on decisively good
+                    # acceptance (2x the disable floor — hysteresis, so
+                    # a marginal probe can't oscillate the drafter
+                    # on/off), and back off exponentially while probes
+                    # keep failing.
+                    bar = min(1.0, 2.0 * floor)
+                    good = acc >= bar * nd
+                    self._accept_ewma[i] = acc / nd if good else 0.0
+                    if not good:
+                        self._probe_gap[i] *= 2
+                        self._probe_at[i] = self.steps + self._probe_gap[i]
+                elif acc == 0:
+                    # a fully rejected span is maximal evidence — don't
+                    # wait for the blend to drift below the floor, a
+                    # second wasted verify round costs more than the
+                    # risk of a probe re-enabling a good drafter.
+                    self._accept_ewma[i] = 0.25 * self._accept_ewma[i]
+                    if self._accept_ewma[i] < floor:
+                        self._probe_gap[i] = max(self.speculate_probe // 2, 1)
+                        self._probe_at[i] = self.steps + self._probe_gap[i]
+                else:
+                    self._accept_ewma[i] = (0.5 * self._accept_ewma[i]
+                                            + 0.5 * (acc / nd))
+                    if self._accept_ewma[i] < floor:
+                        # just disabled: schedule the first probe for
+                        # the next grid tick (gap of half a period, so
+                        # ``steps % probe == 0`` doesn't skip it).
+                        self._probe_gap[i] = max(self.speculate_probe // 2, 1)
+                        self._probe_at[i] = self.steps + self._probe_gap[i]
+            if finished[i]:
+                r.out.close()
+                self._slot_req[i] = None
+                self._release_slot(i, prompt=r.prompt)
+                done += 1
+        self.spec_verify_steps += 1
+        self.steps += 1
+        self.retired += done
+        self._note_rate(dt, committed)
+        return done
+
     def step(self) -> int:
         """One batched decode step; returns number of sequences retired.
 
@@ -1689,6 +2128,13 @@ class ContinuousBatcher:
                     self._grow_slot(slot)
         if all(r is None for r in self._slot_req):
             return 0
+        if self.paged and self.speculate_k:
+            drafts = self._collect_drafts()
+            if drafts:
+                swaps, xfer = self._spec_setup(drafts)
+                if drafts:       # setup may prune drafts (dry pool)
+                    return self._spec_step(drafts, swaps, xfer)
+        n_live = sum(1 for r in self._slot_req if r is not None)
         t0 = time.monotonic()
         try:
             self._fault.check("step")
@@ -1704,9 +2150,7 @@ class ContinuousBatcher:
                     self.remaining, self.active)
         except Exception as e:
             raise BatcherFault(e) from e
-        dt = time.monotonic() - t0
-        self._ewma_step_s = (dt if self._ewma_step_s == 0.0
-                             else 0.8 * self._ewma_step_s + 0.2 * dt)
+        self._note_rate(time.monotonic() - t0, n_live)
         out = np.asarray(out)                  # the ONLY per-step transfer
         toks, finished = out[0], out[1]
         done = 0
@@ -1724,6 +2168,8 @@ class ContinuousBatcher:
                 self._host_last_tok[i] = int(toks[i])
                 self._host_pos[i] += 1
                 self._host_remaining[i] -= 1
+                if self.speculate_k:
+                    self._history[i].append(int(toks[i]))
             if finished[i]:
                 r.out.close()
                 self._slot_req[i] = None

@@ -177,6 +177,82 @@ def make_paged_decode_step(cfg: ModelConfig, max_seq: int, page_size: int):
 
 
 @functools.lru_cache(maxsize=32)
+def make_spec_verify_step(cfg: ModelConfig, k: int, max_seq: int,
+                          page_size: int):
+    """Jitted batched speculative *verify* step: one (b, k) forward
+    scores a k-token span per slot in a single call.
+
+    Row layout per slot: ``tokens[:, 0]`` is the last committed token
+    (position ``pos``), ``tokens[:, 1:1+n_draft]`` the drafted tokens,
+    and the remaining columns padding (any value — they are agreement-
+    masked).  Greedy argmax of logits row i predicts position
+    ``pos + i + 1``; the accepted length is the longest prefix of drafts
+    agreeing with those predictions, and every verify commits at least
+    one token (the plain-decode equivalent: n_draft == 0 rows commit
+    exactly 1, so ONE compiled program serves mixed spec/non-spec
+    batches).  KV for the whole span is written by the forward.
+
+    The scratch redirection happens *inside* the jit: ``copy_src`` /
+    ``copy_dst`` name the old -> scratch page copies per group and
+    ``swap_rows``/``swap_cols``/``swap_vals`` the block-table entries to
+    repoint (all fixed-length, padded with out-of-range indices that
+    ``mode="drop"`` discards), so the whole round — copy, swap, span
+    forward, agreement — is ONE dispatch and the batcher's own device
+    table is never touched by speculation (rollback is free; only
+    commits scatter it afterwards).
+
+    Host transfer: one (k + 2, n_slots) int32 — k prediction rows, the
+    per-slot commit count, and the finished flags."""
+    from ..models.cache_layouts import get_layout
+    layout = get_layout(cfg, page_size)
+    i32 = jnp.int32
+
+    def verify_fn(params, pools, block_tab, tokens, n_draft, pos,
+                  remaining, active, copy_src, copy_dst, swap_rows,
+                  swap_cols, swap_vals):
+        pools = dict(pools)
+        bt = {}
+        for g in layout.groups:
+            ax = layout.page_axis(g.name)
+            n_pages = jax.tree.leaves(pools[g.name])[0].shape[ax]
+            si = jnp.clip(copy_src[g.name], 0, n_pages - 1)
+            di = copy_dst[g.name]
+            pools[g.name] = jax.tree.map(
+                lambda a, si=si, di=di, ax=ax: a.at[
+                    (slice(None),) * ax + (di,)].set(
+                    jnp.take(a, si, axis=ax), mode="drop"),
+                pools[g.name])
+            tab = block_tab[g.name].at[
+                swap_rows[g.name], swap_cols[g.name]].set(
+                swap_vals[g.name], mode="drop")
+            bt[g.name] = jnp.where(active[:, None], tab, n_pages)
+        cache = {"pages": pools, "block_tab": bt}
+        logits, new_pools = registry.forward(
+            cfg, params, {"tokens": tokens}, mode="verify", cache=cache,
+            pos=pos)
+        preds = jnp.argmax(logits, -1).astype(i32)          # (n, k)
+        # drafts agree while they match the model's own greedy argmax.
+        agree = (tokens[:, 1:] == preds[:, :-1]) \
+            & (jnp.arange(k - 1)[None, :] < n_draft[:, None])
+        acc = jnp.sum(jnp.cumprod(agree.astype(i32), axis=1), axis=1)
+        commit = jnp.minimum(jnp.minimum(acc + 1, remaining),
+                             jnp.maximum(max_seq - 1 - pos, 1))
+        commit = jnp.where(active, commit, 0)
+        last = jnp.take_along_axis(
+            preds, jnp.clip(commit - 1, 0, k - 1)[:, None], axis=1)[:, 0]
+        last_tok = jnp.where(active, last, tokens[:, 0])
+        pos = pos + commit
+        remaining = remaining - commit
+        finished = active & ((remaining <= 0) | (pos >= max_seq - 1))
+        active = active & ~finished
+        out = jnp.concatenate(
+            [preds.T, commit[None, :], finished.astype(i32)[None, :]])
+        return new_pools, last_tok, pos, remaining, active, out
+
+    return jax.jit(verify_fn, donate_argnums=(1, 5, 6, 7))
+
+
+@functools.lru_cache(maxsize=32)
 def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int,
                             page_size: int):
     """Jitted single-request prefill chunk against the paged cache.

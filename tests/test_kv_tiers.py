@@ -422,6 +422,75 @@ def test_short_preempted_sequences_resume_by_recompute(model):
     assert outs == golds
 
 
+# --- chunked-prefill argmax near-ties: the documented tolerance ------------------------
+
+# Paged chunked prefill reads earlier chunks' K/V back through the
+# bf16 page pools while dense prefill attends over full-precision
+# activations that never round-tripped a pool — so their logits differ
+# by a small, bounded amount, and argmax can flip ONLY where the
+# dense top-2 logits are closer than that bound (a near-tie).  This is
+# the documented tolerance from ROADMAP "chunked-prefill argmax
+# near-ties"; ``prefill_exact`` pins the pool BITS but the logits path
+# still sees pool-precision reads for non-final chunks.  The bound is
+# calibrated for the float32 smoke models (bf16 pools); see
+# docs/serving.md "Near-tie tolerance".
+CHUNK_LOGIT_TOL = 0.05
+
+
+def _chunk_logits(cfg, params, P, page=8, chunk=8, max_seq=64):
+    """Final-position logits via the paged chunk path (forward-level:
+    fresh pools, identity block table — no batcher machinery)."""
+    layout = get_layout(cfg, page)
+    npages = {g.name: layout.n_blocks(g.name, max_seq)
+              for g in layout.groups}
+    pools = PP.init_params(registry.paged_cache_decls(cfg, npages, page))
+    bt = {g.name: jnp.arange(layout.n_blocks(g.name, max_seq),
+                             dtype=jnp.int32)[None]
+          for g in layout.groups}
+    last = None
+    for c0 in range(0, len(P), chunk):
+        seg = P[c0:c0 + chunk]
+        toks = np.zeros(chunk, np.int32)
+        toks[:len(seg)] = seg
+        logits, pools = registry.forward(
+            cfg, params, {"tokens": jnp.asarray(toks)[None]}, mode="chunk",
+            cache={"pages": pools, "block_tab": bt},
+            pos=jnp.full((1,), c0, jnp.int32),
+            last_pos=jnp.full((1,), len(seg) - 1, jnp.int32),
+            cache_offset=jnp.zeros((1,), jnp.int32))
+        last = np.asarray(logits[0, len(seg) - 1], np.float64)
+    return last
+
+
+def test_chunked_prefill_logits_within_tolerance_and_ties_explain_argmax(
+        model):
+    """The near-tie contract: across a prompt sweep (a) paged-chunk
+    final logits stay within CHUNK_LOGIT_TOL of the dense oracle's,
+    and (b) every argmax divergence happens at a dense top-2 gap
+    smaller than that tolerance — chunking only ever flips genuine
+    near-ties, never a clearly-ranked token."""
+    cfg, params = model
+    worst = 0.0
+    for seed in range(12):                     # seed 10 is a known flip
+        rng = np.random.default_rng(seed)
+        P = rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(9, 30))).astype(np.int32)
+        a = _chunk_logits(cfg, params, P)
+        b, _ = registry.forward(cfg, params,
+                                {"tokens": jnp.asarray(P)[None]},
+                                mode="prefill", cache_len=64)
+        b = np.asarray(b[0, len(P) - 1], np.float64)
+        diff = float(np.max(np.abs(a - b)))
+        worst = max(worst, diff)
+        assert diff <= CHUNK_LOGIT_TOL, f"seed {seed}: |dlogit| {diff}"
+        if int(np.argmax(a)) != int(np.argmax(b)):
+            top2 = np.sort(b)[-2:]
+            gap = float(top2[1] - top2[0])
+            assert gap < CHUNK_LOGIT_TOL, \
+                f"seed {seed}: argmax flip at top-2 gap {gap}"
+    assert worst > 0.0                         # the paths really differ
+
+
 # --- tier off: seed behavior unchanged ------------------------------------------------
 
 
