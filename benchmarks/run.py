@@ -1001,6 +1001,126 @@ def bench_spec_decode_throughput():
     RESULTS["spec_decode_throughput"]["tokens_equal"] = 1
 
 
+def bench_serve_sharded_throughput():
+    """Mesh-sharded serving: the shard_map wrapper must be free at
+    tp=1, and the TP axis must buy its memory win at tp=2.
+
+    - *1-device arm* (in-process, gated): the SAME workload through the
+      unsharded batcher and through a (1, 1) mesh — identical math on
+      identical devices, so the paired ratio isolates pure wrapper
+      overhead (shard_map dispatch, spec normalization, donation).
+      main() exits nonzero if the median paired ratio drops below
+      0.95x, or if the token streams differ at all.
+    - *2-way arm* (subprocess — XLA locks the host device count at
+      first jax init): a (1, 2) model-parallel mesh must reproduce the
+      1-device token streams exactly while each shard holds exactly
+      half the KV pool bytes at equal tokens-in-flight.
+    """
+    import dataclasses
+    import subprocess
+    import sys
+    import threading
+    from repro import configs
+    from repro.configs.base import smoke_variant
+    from repro.models import registry
+    from repro.serve.batching import ContinuousBatcher, Request, drain
+
+    cfg = smoke_variant(configs.get("minitron-4b"))
+    pcfg = dataclasses.replace(cfg, kv_page_size=8, prefill_chunk=8)
+    mcfg = dataclasses.replace(pcfg, mesh_shape=(1, 1))
+    params = registry.init(pcfg, 0)
+    max_new, trials = (30, 3) if SMOKE else (80, 5)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(8, 15))).astype(np.int32)
+               for _ in range(4)]
+
+    def arm(acfg):
+        bat = ContinuousBatcher(acfg, params, n_slots=4, max_seq=128)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=max_new)
+                for i, p in enumerate(prompts)]
+        prod = threading.Thread(
+            target=lambda: [bat.submit(r) for r in reqs])
+        t0 = time.perf_counter()
+        prod.start()
+        bat.run(len(reqs))
+        prod.join()
+        return [drain(r) for r in reqs], time.perf_counter() - t0
+
+    arm(pcfg)                        # compile both programs untimed
+    arm(mcfg)
+    ratios, best = [], float("inf")
+    for _ in range(trials):
+        out_u, dt_u = arm(pcfg)
+        out_s, dt_s = arm(mcfg)
+        assert out_s == out_u, "(1, 1) mesh diverged from unsharded"
+        ratios.append(dt_u / dt_s)
+        best = min(best, dt_s)
+    mesh_ratio = float(np.median(ratios))
+
+    code = (
+        "import dataclasses, time, threading\n"
+        "import numpy as np\n"
+        "from repro import configs\n"
+        "from repro.configs.base import smoke_variant\n"
+        "from repro.models import registry\n"
+        "from repro.serve.batching import ContinuousBatcher, Request, "
+        "drain\n"
+        "cfg = dataclasses.replace(smoke_variant("
+        "configs.get('minitron-4b')), kv_page_size=8, prefill_chunk=8)\n"
+        "params = registry.init(cfg, 0)\n"
+        "rng = np.random.default_rng(11)\n"
+        "prompts = [rng.integers(0, cfg.vocab_size, "
+        "int(rng.integers(8, 15))).astype(np.int32) for _ in range(4)]\n"
+        f"MN = {max_new}\n"
+        "def arm(acfg):\n"
+        "    bat = ContinuousBatcher(acfg, params, n_slots=4, "
+        "max_seq=128)\n"
+        "    reqs = [Request(rid=i, prompt=p.copy(), max_new=MN) "
+        "for i, p in enumerate(prompts)]\n"
+        "    prod = threading.Thread("
+        "target=lambda: [bat.submit(r) for r in reqs])\n"
+        "    t0 = time.perf_counter()\n"
+        "    prod.start()\n"
+        "    bat.run(len(reqs))\n"
+        "    prod.join()\n"
+        "    return [drain(r) for r in reqs], "
+        "time.perf_counter() - t0, bat\n"
+        "u, _, _ = arm(cfg)\n"
+        "s, dt, bat = arm(dataclasses.replace(cfg, mesh_shape=(1, 2)))\n"
+        "assert s == u, '2-way token streams diverged from 1-device'\n"
+        "m = bat.stats()['mesh']\n"
+        "assert 2 * m['pool_bytes_per_shard'] == m['pool_bytes_total']"
+        ", m\n"
+        "print('TP2', 4 * MN / dt, m['pool_bytes_per_shard'], "
+        "m['pool_bytes_total'])\n")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..",
+        "src")) + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, \
+        f"2-way mesh subprocess failed:\n{r.stdout}\n{r.stderr}"
+    tp2 = [ln for ln in r.stdout.splitlines()
+           if ln.startswith("TP2")][0].split()
+    tp2_tok_s, shard_b, total_b = (float(tp2[1]), int(tp2[2]),
+                                   int(tp2[3]))
+
+    tok_s = 4 * max_new / best
+    row("serve_sharded_throughput", best / (4 * max_new) * 1e6,
+        f"tok_per_s_1dev_mesh={tok_s:.0f};mesh_ratio={mesh_ratio:.2f};"
+        f"tp2_tok_per_s={tp2_tok_s:.0f};"
+        f"tp2_pool_bytes_per_shard={shard_b};"
+        f"tp2_pool_bytes_total={total_b};tokens_equal=1")
+    res = RESULTS["serve_sharded_throughput"]
+    res["mesh_ratio"] = round(mesh_ratio, 3)
+    res["tokens_equal"] = 1
+    res["tp2_pool_bytes_per_shard"] = shard_b
+    res["tp2_pool_bytes_total"] = total_b
+
+
 # Rows that belong to the serve JSON snapshot.  Smoke runs use smaller
 # workloads (fewer requests/lengths), so they write a separate
 # BENCH_serve_smoke.json — only same-mode snapshots are diffable.
@@ -1010,7 +1130,7 @@ SERVE_ROWS = ("decode_step_logits", "decode_step_smoke",
               "bursty_admission", "serve_family_gemma3",
               "serve_family_int8", "prefix_hit_ttft", "prefix_capacity",
               "host_tier_rehit", "spill_resume_latency", "deadline_slo",
-              "spec_decode_throughput")
+              "spec_decode_throughput", "serve_sharded_throughput")
 
 
 def main(argv=None) -> None:
@@ -1048,6 +1168,7 @@ def main(argv=None) -> None:
     bench_spill_resume_latency()
     bench_deadline_slo()
     bench_spec_decode_throughput()
+    bench_serve_sharded_throughput()
 
     out_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)),
@@ -1178,6 +1299,31 @@ def main(argv=None) -> None:
                   f"{sd.get('adv_ratio')}x < {adv_floor}x of plain "
                   f"decode on the adversarial workload — self-disable "
                   f"is not containing the verify overhead", flush=True)
+            raise SystemExit(1)
+    # 10. the shard_map serving wrapper must be free when it does
+    #     nothing: a (1, 1) mesh runs the identical program through the
+    #     sharded path on the same single device, so any median paired
+    #     ratio below 0.95x is pure wrapper overhead.  The 2-way arm
+    #     (asserted inside the bench) must halve per-shard KV pool
+    #     bytes at equal tokens-in-flight with identical token streams.
+    sh = RESULTS.get("serve_sharded_throughput", {})
+    if sh:
+        if sh.get("tokens_equal") != 1:
+            print("FATAL: mesh-sharded decode output diverged from "
+                  "the unsharded batcher", flush=True)
+            raise SystemExit(1)
+        if sh.get("mesh_ratio", 0) < 0.95:
+            print(f"FATAL: the tp=1 shard_map serving path ran at "
+                  f"{sh.get('mesh_ratio')}x < 0.95x of the unsharded "
+                  f"batcher — the wrapper is not free", flush=True)
+            raise SystemExit(1)
+        if (sh.get("tp2_pool_bytes_per_shard", 0) * 2
+                != sh.get("tp2_pool_bytes_total", -1)):
+            print(f"FATAL: 2-way mesh per-shard KV pool bytes "
+                  f"({sh.get('tp2_pool_bytes_per_shard')}) are not half "
+                  f"of the total ({sh.get('tp2_pool_bytes_total')}) — "
+                  f"the TP axis is not buying its memory win",
+                  flush=True)
             raise SystemExit(1)
 
 

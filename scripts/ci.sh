@@ -27,10 +27,15 @@ python -m pytest -x -q
 # than recomputing it, if the staged spill/restore engine is slower
 # than the per-page baseline it replaced, if SLA scheduling does not
 # beat FIFO on the latency-class SLO hit-rate at equal throughput
-# (deadline_slo), or if speculative decode (spec_decode_throughput)
+# (deadline_slo), if speculative decode (spec_decode_throughput)
 # fails its floors — repetitive-workload speedup, adversarial-workload
 # ratio (the self-disabling drafter must keep the overhead bounded),
-# or bit-identity of the speculative token streams vs plain decode.
+# or bit-identity of the speculative token streams vs plain decode —
+# or if mesh-sharded serving (serve_sharded_throughput) regresses: the
+# tp=1 shard_map wrapper must stay within 0.95x of the unsharded
+# batcher (paired-median ratio), and the 2-way mesh arm (subprocess
+# with 2 simulated host devices) must reproduce the 1-device token
+# streams exactly while halving per-shard KV pool bytes.
 python -m benchmarks.run --smoke --serve
 
 # Chaos smoke (serve.resilience): the deterministic fault-injection

@@ -182,6 +182,24 @@ class ModelConfig:
     # cycles) re-enables speculation via the EWMA instead of staying
     # disabled forever.  0 makes the disable sticky for the request.
     speculate_probe: int = 16
+    # -- mesh-sharded serving (serve.serve_loop / serve.batching) -------------------
+    # device mesh for the paged serving steps: () = single device (the
+    # shard_map path is skipped entirely).  Rank keys the axis names —
+    # (model,), (data, model), (pod, data, model) — and the LAST entry
+    # is the tensor-parallel extent: KV page pools shard over the
+    # head/latent axis per CacheLayout group, block tables and slot
+    # state stay replicated, and the decode/prefill/verify step bodies
+    # run under jax.shard_map with a psum at every attention/FF output
+    # projection and an all_gather at the MLA latent read and the
+    # logits.  Token streams are bit-identical to the 1-device path for
+    # float32 smoke configs (column-sharded matmuls reduce over the
+    # UNSHARDED contraction dim, so per-shard partials sum in a fixed
+    # axis-index order).  Validate with
+    # distributed.sharding.validate_shardable before building a batcher.
+    mesh_shape: Tuple[int, ...] = ()
+    # mesh axis the model (tensor-parallel) dims shard over; must name
+    # the last axis of mesh_shape.
+    tp_axis: str = "model"
     embed_std: float = 0.02
 
     # -- derived -----------------------------------------------------------------

@@ -1,2 +1,5 @@
 from .sharding import (axis_rules, constrain, spec_for, current_mesh,
-                       use_rules, zero_shard_spec, DEFAULT_RULES)
+                       use_rules, zero_shard_spec, DEFAULT_RULES,
+                       manual_axis, active_manual_axis, psum_parts,
+                       gather_parts, part_index, part_count,
+                       validate_shardable)

@@ -6,6 +6,22 @@ launcher installs a rule table mapping logical axes to mesh axes.  The
 same model definition then runs on a single CPU device (no mesh — all
 constraints become no-ops), a 16×16 pod, or a 2×16×16 multi-pod, without
 touching model source — hlslib's portability story for distribution.
+
+Serving integration (see docs/serving.md "Mesh-sharded serving"): the
+paged decode/prefill/verify steps in ``serve.serve_loop`` run their
+bodies under ``jax.shard_map`` on the mesh named by
+``cfg.mesh_shape``/``cfg.tp_axis``.  Inside a shard_map body there is no
+global mesh context, so every ``constrain()`` in the model code is a
+no-op there; instead the body enters ``manual_axis(cfg.tp_axis)`` and
+the model inserts explicit collectives through ``psum_parts`` /
+``gather_parts`` at the attention / FF output projections (partial-sum
+reduce) and at the MLA latent read + logits (tile gather).  Which tensor
+dims shard is still driven by this module's rule table:
+``serve.serve_loop`` computes parameter and KV-pool PartitionSpecs from
+the same ``Decl`` logical axes via ``params.param_specs`` under
+``use_rules`` overrides, and ``validate_shardable`` rejects configs
+whose head/latent/ff extents don't divide the model axis before
+anything reaches jit.
 """
 
 from __future__ import annotations
@@ -131,6 +147,108 @@ def constrain(x, *axes: Optional[str]):
     if mesh is None:
         return x
     return jax.lax.with_sharding_constraint(x, spec_for(axes, mesh))
+
+
+# -- manual (shard_map) collectives ------------------------------------------------
+#
+# shard_map bodies trace with per-shard shapes and NO global mesh
+# context (current_mesh() is None there), so `constrain` can't express
+# the cross-shard reductions tensor parallelism needs.  The serving
+# steps instead enter `manual_axis(tp_axis)` around the model call and
+# the model inserts explicit collectives via the helpers below — all of
+# which degrade to identity when no manual axis is active, so the same
+# model code keeps running unchanged on one device.
+
+_manual_axis_var: contextvars.ContextVar[Optional[str]] = \
+    contextvars.ContextVar("manual_axis", default=None)
+
+
+@contextlib.contextmanager
+def manual_axis(name: Optional[str]):
+    """Mark a mesh axis as manually sharded for the enclosed trace (the
+    serving shard_map bodies).  ``psum_parts``/``gather_parts`` become
+    real collectives over it; ``None`` (or no context) keeps them
+    identity."""
+    token = _manual_axis_var.set(name)
+    try:
+        yield name
+    finally:
+        _manual_axis_var.reset(token)
+
+
+def active_manual_axis() -> Optional[str]:
+    return _manual_axis_var.get()
+
+
+def psum_parts(x):
+    """Sum per-shard partial results over the manual axis (the reduce at
+    a row-sharded output projection); identity when inactive."""
+    ax = _manual_axis_var.get()
+    if ax is None:
+        return x
+    return jax.lax.psum(x, ax)
+
+
+def gather_parts(x, axis: int = -1):
+    """Concatenate per-shard tiles along ``axis`` in axis-index order
+    (the all_gather at a column-sharded boundary — MLA latent reads,
+    logits); identity when inactive.  Bit-exact: no arithmetic, just a
+    deterministic concat."""
+    ax = _manual_axis_var.get()
+    if ax is None:
+        return x
+    return jax.lax.all_gather(x, ax, axis=axis % x.ndim, tiled=True)
+
+
+def part_index() -> int:
+    """This shard's index on the manual axis (0 when inactive) — the
+    offset for slicing a full-width tensor down to the local tile."""
+    ax = _manual_axis_var.get()
+    if ax is None:
+        return 0
+    return jax.lax.axis_index(ax)
+
+
+def part_count() -> int:
+    """Shard count of the manual axis (1 when inactive)."""
+    ax = _manual_axis_var.get()
+    if ax is None:
+        return 1
+    return jax.lax.axis_size(ax)
+
+
+def validate_shardable(cfg, tp: int) -> None:
+    """Reject configs the serving tensor-parallel path cannot shard,
+    BEFORE anything reaches jit — each error names the offending model
+    dim and the knob that fixes it.  ``tp`` is the model-axis extent
+    (``cfg.mesh_shape[-1]``)."""
+    if tp <= 1:
+        return
+
+    def _req(value: int, what: str, knob: str):
+        if value % tp != 0:
+            raise ValueError(
+                f"{cfg.name}: {what} = {value} does not divide the "
+                f"model axis ({knob} must be a multiple of "
+                f"mesh_shape[-1] = {tp}); pick a smaller model axis or "
+                f"adjust {knob}")
+
+    _req(cfg.n_heads, "n_heads (query heads)", "n_heads")
+    if cfg.mla:
+        _req(cfg.kv_lora_rank, "kv_lora_rank (MLA latent dim)",
+             "kv_lora_rank")
+    else:
+        # No MQA replication fallback: the KV pools shard over kv_heads.
+        _req(cfg.n_kv_heads, "n_kv_heads (KV head groups)", "n_kv_heads")
+    _req(cfg.d_ff, "d_ff (MLP hidden dim)", "d_ff")
+    if cfg.moe_d_ff:
+        _req(cfg.moe_d_ff, "moe_d_ff (expert hidden dim)", "moe_d_ff")
+    if cfg.fuse_qkv:
+        raise ValueError(
+            f"{cfg.name}: fuse_qkv is incompatible with tensor-parallel "
+            f"serving (sharding the concatenated qkv output dim would "
+            f"split across the q|k|v boundary); set fuse_qkv=False or "
+            f"mesh_shape[-1] = 1")
 
 
 def zero_shard_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,

@@ -17,6 +17,16 @@ TPU-native design (hardware-adaptation notes):
   constant taps: the window (F6) is static, so skipping is static too.
 
 GQA is supported by index-mapping kv blocks with head // group.
+
+Tensor-parallel serving (``cfg.mesh_shape``, docs/serving.md) runs
+these kernels UNCHANGED inside the ``shard_map`` body: attention is
+embarrassingly parallel over heads, so each shard sees the same shapes
+it would on one device, just with ``n_heads/tp`` query heads and
+``n_kv_heads/tp`` KV heads (page pools arrive pre-sharded over the
+head axis, block tables replicated).  The GQA ``head // group`` map
+stays valid because query and KV heads shard by the SAME factor —
+enforced launch-side by ``distributed.sharding.validate_shardable``.
+No collective appears until after the kernel, at the wo projection.
 """
 
 from __future__ import annotations

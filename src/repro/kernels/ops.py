@@ -4,6 +4,13 @@ The framework calls these; ``use_pallas`` selects the Mosaic kernel
 (TPU, or interpret=True on CPU for tests) vs the pure-XLA reference path
 (what the 512-device dry-run lowers — Mosaic cannot lower on CPU host
 devices, and the XLA path's HLO is the roofline input; see DESIGN.md §9).
+
+These wrappers are shard-oblivious: under mesh-sharded serving
+(docs/serving.md) they execute inside a ``shard_map`` body on
+shard-local shapes (heads / ff already divided by tp) and never emit
+collectives themselves — the psum/all_gather boundaries live in
+``models.layers`` via ``distributed.sharding.psum_parts``/
+``gather_parts``, so every kernel here stays a pure per-shard map.
 """
 
 from __future__ import annotations

@@ -5,6 +5,13 @@ Every function here is deliberately naive-but-obviously-correct; tests
 sweep shapes/dtypes and assert the Pallas kernels (interpret=True) match
 these to numerical tolerance.  Model code reuses the *chunked* SSD and
 attention refs as its XLA path (what the dry-run lowers).
+
+Like the Pallas kernels they mirror, every ref here is a pure
+per-shard map under mesh-sharded serving: a head-sharded call sees
+``n_heads/tp`` heads and produces the same bits as the corresponding
+slice of the 1-device call (softmax/normalizer arithmetic never
+crosses heads), which is what makes the sharded == unsharded
+token-identity acceptance possible.
 """
 
 from __future__ import annotations

@@ -85,6 +85,12 @@ def main(argv=None):
     ap.add_argument("--klass", choices=("latency", "standard", "batch"),
                     default="standard",
                     help="SLA class stamped on every generated request")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh shape, e.g. '2' (2-way tensor "
+                         "parallel) or '1x2' (data x model); the last "
+                         "axis is the model/TP axis — KV page pools "
+                         "shard over heads/latent, decode runs under "
+                         "shard_map (see docs/serving.md)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -117,6 +123,25 @@ def main(argv=None):
         if args.tier_restore_min >= 0:
             kw["tier_restore_min_tokens"] = args.tier_restore_min
         cfg = dataclasses.replace(cfg, **kw)
+    if args.mesh:
+        import dataclasses
+        from ..distributed.sharding import validate_shardable
+        try:
+            shape = tuple(int(d) for d in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"--mesh {args.mesh!r}: expected INTxINT... "
+                     f"(e.g. '2' or '1x2')")
+        if not cfg.kv_page_size:
+            ap.error("--mesh needs the paged batcher (page pools shard "
+                     "over heads/latent): pass --page-size as well")
+        # Validate shardability at LAUNCH time — a config whose heads /
+        # latent dim / ff dim does not divide the model axis must fail
+        # here with the axis and knob named, not deep inside jit.
+        try:
+            validate_shardable(cfg, shape[-1])
+        except ValueError as e:
+            ap.error(str(e))
+        cfg = dataclasses.replace(cfg, mesh_shape=shape)
     params = registry.init(cfg, args.seed)
     rng = np.random.default_rng(args.seed)
 
@@ -128,6 +153,15 @@ def main(argv=None):
                                 queue_depth=args.queue_depth or None,
                                 faults=args.faults or None)
     supervisor = ServeSupervisor(batcher) if args.supervise else None
+    if batcher.mesh is not None:
+        m = batcher.stats()["mesh"]
+        co = m["collectives_per_decode_step"]
+        print(f"mesh: {'x'.join(map(str, m['shape']))} over axes "
+              f"({','.join(m['axes'])}), tp={m['tp']}, kv pool "
+              f"{m['pool_bytes_per_shard']}B/shard of "
+              f"{m['pool_bytes_total']}B total, "
+              f"{co['psum']} psum + {co['all_gather']} all_gather "
+              f"per decode step")
     sysp = rng.integers(0, cfg.vocab_size,
                         min(args.shared_prefix,
                             args.prompt_len)).astype(np.int32)

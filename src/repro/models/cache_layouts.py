@@ -32,6 +32,21 @@ flash block-table kernel) live in ``models.layers`` /
 ``get_layout``; the batcher (``serve.batching``) only ever talks to the
 layout API, so adding a family means adding a layout here — no batcher
 edits.
+
+Mesh sharding (``cfg.mesh_shape`` — see docs/serving.md): pool leaves
+may arrive sharded over their head/latent axis (kv_heads for GQA/int8
+groups, the lora dim for MLA latent pages).  Every page-movement
+primitive below stays shard-correct without per-layout code: the page
+axis is never the sharded axis, so ``gather_pages``/``copy_pages``
+slice along an unsharded dim (the result keeps the leaf's sharding),
+``spill`` materializes FULL host leaves (np.asarray assembles all
+shards), and ``restore_pages`` scatters full-width payloads back into
+the sharded pool (GSPMD reshards the replicated update).  Host-side
+payloads, prefix-digest keys, and T1/T2 snapshots are therefore
+mesh-shape-independent: pages spilled on a 2-way mesh restore
+bit-identically on 1- or 4-way meshes.  Layout instances are lru_cached
+and shared across batchers, so they hold no mesh state — the batcher
+re-pins returned pools to its own sharding tree (a no-op device_put).
 """
 
 from __future__ import annotations

@@ -17,7 +17,8 @@ import numpy as np
 from jax import lax
 
 from ..core import datapack
-from ..distributed.sharding import constrain
+from ..distributed.sharding import (constrain, gather_parts, part_index,
+                                    psum_parts)
 from .params import Decl
 
 F32 = jnp.float32
@@ -671,7 +672,9 @@ def attention_apply_paged(cfg, p, x, *, window: Optional[int] = None,
         if window is not None:
             mask &= kpos_cat[:, None, :] > positions[:, :, None] - window
         o = attention_masked(q, K, V, mask)
-    y = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"]
+    # under shard_map TP the heads are column-sharded and wo row-sharded:
+    # each shard holds a partial sum over its heads — reduce it here.
+    y = psum_parts(o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"])
     y = constrain(y, "batch", None, "embed")
     return x + y, new_pages
 
@@ -838,8 +841,15 @@ def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
     q_rope = rope(q[..., nope:], positions[:, :, None], cfg.rope_theta)
 
     cp, rpool = pages["c_kv"], pages["k_rope"]
-    n_pages, page, _ = cp.shape
+    n_pages, page, lora_local = cp.shape
     n_blocks = block_tab.shape[1]
+    # under shard_map TP the latent pool is sharded over the lora dim
+    # (lora_local = lora / tp) while w_dkv/kv_norm stay replicated: every
+    # shard computes the FULL latent row, writes only its slice, and the
+    # read below gathers the slices back (a bit-exact concat in
+    # axis-index order — the ISSUE's all_gather at the attention
+    # boundary).  k_rope pages are replicated (no head/latent dim).
+    sharded_latent = lora_local != lora
 
     # append: scatter latent rows (padded chunk tails write nowhere;
     # positions below cache_offset live in shared prefix pages and are
@@ -854,8 +864,12 @@ def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
                              jnp.minimum(logical, n_blocks - 1), axis=1)
     wp = jnp.where(keep, wp, n_pages)
     wo = positions % page
+    c_kv_loc = c_kv
+    if sharded_latent:
+        c_kv_loc = lax.dynamic_slice_in_dim(
+            c_kv, part_index() * lora_local, lora_local, axis=-1)
     new_pages = {
-        "c_kv": cp.at[wp, wo].set(c_kv.astype(cp.dtype), mode="drop"),
+        "c_kv": cp.at[wp, wo].set(c_kv_loc.astype(cp.dtype), mode="drop"),
         "k_rope": rpool.at[wp, wo].set(k_rope.astype(rpool.dtype),
                                        mode="drop"),
     }
@@ -863,7 +877,10 @@ def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
     # read: pre-write pool gather + own-chunk overlay.
     bt = jnp.minimum(block_tab, n_pages - 1)
     S = n_blocks * page
-    cc = cp[bt].reshape(b, S, lora).astype(F32)
+    cc = cp[bt].reshape(b, S, lora_local)
+    if sharded_latent:
+        cc = gather_parts(cc, axis=-1)               # back to full lora
+    cc = cc.astype(F32)
     cr = rpool[bt].reshape(b, S, rp).astype(F32)
     if s == 1 or verify:                             # pool-rounded own rows
         cl = c_kv.astype(cp.dtype).astype(F32)
@@ -890,7 +907,8 @@ def mla_apply_paged(cfg, p, x, *, pages: Dict[str, jnp.ndarray],
     ctx = jnp.einsum("bhsS,bSl->bshl", probs, CC)
     w_uv = p["w_uv"].reshape(lora, hq, vd)
     o = jnp.einsum("bshl,lhv->bshv", ctx, w_uv.astype(F32)).astype(x.dtype)
-    y = o.reshape(b, s, hq * vd) @ p["wo"]
+    # TP: query heads column-sharded, wo row-sharded -> per-shard partial.
+    y = psum_parts(o.reshape(b, s, hq * vd) @ p["wo"])
     y = constrain(y, "batch", None, "embed")
     return x + y, new_pages
 
@@ -943,7 +961,8 @@ def mlp_apply(cfg, p, x):
     else:
         hh = jax.nn.gelu((h @ p["w_up"]).astype(F32)).astype(h.dtype)
     hh = constrain(hh, "batch", None, "ff")
-    y = hh @ p["w_down"]
+    # TP: w_up/w_gate column-sharded over ff, w_down row-sharded.
+    y = psum_parts(hh @ p["w_down"])
     y = constrain(y, "batch", None, "embed")
     return x + y
 
@@ -1049,6 +1068,11 @@ def moe_apply(cfg, p, x):
 
     if cfg.n_shared_experts:
         y = y + (swiglu(h @ p["sh_gate"], h @ p["sh_up"]) @ p["sh_down"])
+    # TP (shard_map serving): experts keep their full set per shard but
+    # the ff dim is column-sharded (router replicated -> identical
+    # routing), so expert + shared-expert outputs are partial sums over
+    # the manual axis; one reduce covers both.
+    y = psum_parts(y)
     y = constrain(y, "batch", None, "embed")
     # Load-balance auxiliary loss (Switch-style) is returned via closure-
     # free side channel: recomputed in the train loop if needed; here we

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..distributed.sharding import constrain
+from ..distributed.sharding import constrain, gather_parts
 from . import layers as L
 from . import ssm as S
 from .params import Decl, stack_decls as P_stack_decls
@@ -698,6 +698,11 @@ def forward(cfg, params, batch, mode: str = "train",
         logits = jnp.einsum("bsd,kdv->bskv", x, params["unembed"])
     else:
         logits = x @ params["unembed"]
+    if logits.shape[-1] != cfg.padded_vocab:
+        # shard_map TP: unembed is vocab-column-sharded (a bit-exact
+        # per-shard matmul — the contraction dim is unsharded), so the
+        # greedy argmax needs the full row back.
+        logits = gather_parts(logits, axis=-1)
     logits = constrain(logits, "batch", None, "vocab")
     if mode == "train":
         return logits

@@ -154,6 +154,7 @@ from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P_spec
 
 from ..configs.base import ModelConfig
 from ..core.stream import Stream, StreamClosed
@@ -165,7 +166,8 @@ from .prefix_cache import PageAllocator, PrefixIndex
 from .resilience import (BatcherFault, FaultPlan, InjectedFault, StallFault,
                          TerminalEvent, class_rank)
 from .serve_loop import (make_chunk_prefill_step, make_paged_decode_step,
-                         make_spec_verify_step)
+                         make_spec_verify_step, paged_sharding_specs,
+                         serving_mesh_for)
 
 _MIN_BUCKET = 8            # smallest prefill bucket (pad-to-power-of-two)
 _MIN_CHUNK = 16            # smallest auto-selected prefill chunk
@@ -442,6 +444,14 @@ class ContinuousBatcher:
         psz = page_size or cfg.kv_page_size
         self.layout = get_layout(cfg, int(psz)) if psz else None
         self.paged = bool(psz) and self.layout is not None
+        # mesh-sharded serving (cfg.mesh_shape, paged mode only): pools
+        # and params are pinned to their PartitionSpec trees, block
+        # tables and slot vectors replicated, so every jitted step (a
+        # shard_map program — see serve_loop) starts from arguments
+        # already laid out the way its in_specs demand.
+        self.mesh = None
+        self._pool_ns = None       # pools' NamedSharding tree
+        self._rep_ns = None        # replicated NamedSharding
         if self.paged:
             self.page_size = int(psz)
             self.reserve_decode = bool(
@@ -537,6 +547,27 @@ class ContinuousBatcher:
                 name: jnp.full((n_slots, self.n_blocks[name]),
                                self.n_pages[name], i32)
                 for name in self.n_pages}
+            self.mesh, _ = serving_mesh_for(cfg)
+            if self.mesh is not None:
+                p_specs, pool_specs = paged_sharding_specs(
+                    cfg, self.page_size, self.mesh)
+                self._pool_ns = jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), pool_specs,
+                    is_leaf=lambda x: isinstance(x, P_spec))
+                self._rep_ns = NamedSharding(self.mesh, P_spec())
+                self.params = jax.device_put(
+                    self.params,
+                    jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                                 p_specs,
+                                 is_leaf=lambda x: isinstance(x, P_spec)))
+                self.pools = jax.device_put(self.pools, self._pool_ns)
+                self.block_tab = jax.device_put(self.block_tab,
+                                                self._rep_ns)
+                self.last_tok = jax.device_put(self.last_tok, self._rep_ns)
+                self.pos = jax.device_put(self.pos, self._rep_ns)
+                self.remaining = jax.device_put(self.remaining,
+                                                self._rep_ns)
+                self.active = jax.device_put(self.active, self._rep_ns)
             # host mirrors of per-slot decode state (drive lazy growth
             # and preemption without device readbacks).
             self._host_pos = [0] * n_slots
@@ -636,6 +667,16 @@ class ContinuousBatcher:
             return float("inf")
         return r.deadline_ms - (self._clock() - r.submitted_at) * 1e3
 
+    def _pinned(self, pools):
+        """Re-assert the mesh sharding on a pools tree after a host-side
+        page mutation (CoW copy, staged restore, rebuild).  Eager updates
+        on sharded leaves already propagate their sharding; device_put
+        with an identical sharding is a no-op, so this is a cheap
+        invariant check, not a copy.  Identity when unsharded."""
+        if self._pool_ns is None:
+            return pools
+        return jax.device_put(pools, self._pool_ns)
+
     def total_used_pages(self) -> int:
         return sum(a.used_pages for a in self._alloc.values())
 
@@ -668,6 +709,30 @@ class ContinuousBatcher:
         s["cow_copies"] = self.cow_copies
         s["prefix_cache"] = self.prefix_cache
         s["transfers"] = self._xfer.stats()
+        if self.mesh is not None:
+            tp = int(self.cfg.mesh_shape[-1])
+            shard_bytes = total_bytes = 0
+            for leaf in jax.tree.leaves(self.pools):
+                total_bytes += int(leaf.nbytes)
+                local = leaf.sharding.shard_shape(leaf.shape)
+                shard_bytes += int(np.prod(local)) * leaf.dtype.itemsize
+            # static per-decode-step collective counts (from the model
+            # shape, not a trace): one psum per attention + one per
+            # ff/moe block; MLA adds a latent all_gather per layer and
+            # every tp > 1 step gathers the logits tile.
+            s["mesh"] = {
+                "shape": tuple(self.cfg.mesh_shape),
+                "axes": tuple(self.mesh.axis_names),
+                "tp": tp,
+                "pool_bytes_per_shard": shard_bytes,
+                "pool_bytes_total": total_bytes,
+                "collectives_per_decode_step": {
+                    "psum": 2 * self.cfg.n_layers,
+                    "all_gather": (0 if tp <= 1 else
+                                   1 + (self.cfg.n_layers
+                                        if self.cfg.mla else 0)),
+                },
+            }
         # every accepted draft token is one decode step the slot skipped;
         # rolled_back counts draft tokens whose speculative KV was
         # discarded by block-table rollback.
@@ -859,7 +924,7 @@ class ContinuousBatcher:
                         self._alloc[gname].free(pgs)
                 tiers.recomputes += 1
                 return 0
-            self.pools = pools
+            self.pools = self._pinned(pools)
             total = (nb + taken) * tiers.block
             # blocks below nb already exist in the tree — insert ignores
             # their (placeholder) entries and absorbs only ours.
@@ -947,9 +1012,9 @@ class ContinuousBatcher:
             if cow and shared[name][n_attach:]:
                 # divergence mid-page: duplicate the boundary page into
                 # the first private page before any differing write.
-                self.pools = self.layout.copy_pages(
+                self.pools = self._pinned(self.layout.copy_pages(
                     self.pools, name, shared[name][n_attach:n_attach + 1],
-                    grabbed[name][:1])
+                    grabbed[name][:1]))
             if pinned[name][n_attach:]:            # unpin the CoW source
                 self._alloc[name].free(pinned[name][n_attach:])
             row = attach + grabbed[name]
@@ -1248,8 +1313,8 @@ class ContinuousBatcher:
                 got = take_one(g.name)
                 if got is None:
                     return False
-                self.pools = self.layout.copy_pages(
-                    self.pools, g.name, [pages[j]], got)
+                self.pools = self._pinned(self.layout.copy_pages(
+                    self.pools, g.name, [pages[j]], got))
                 self._alloc[g.name].free([pages[j]])   # drop the shared ref
                 pages[j] = got[0]
                 self.block_tab[g.name] = self.block_tab[g.name].at[
@@ -1343,7 +1408,7 @@ class ContinuousBatcher:
                 rec.data, rec.counts, rec.shared = {}, {}, {}
                 self._preempted.insert(idx, rec)
                 continue
-            self.pools = pools
+            self.pools = self._pinned(pools)
             for name, priv in grabbed.items():
                 pages = rec.shared.get(name, []) + priv
                 self._set_table_row(name, slot, pages)
@@ -1432,9 +1497,9 @@ class ContinuousBatcher:
             self._prefix = PrefixIndex(
                 [g.name for g in self.layout.groups],
                 self.page_size, self.prefix_block)
-        self.pools = PP.init_params(
+        self.pools = self._pinned(PP.init_params(
             registry.paged_cache_decls(self.cfg, self.n_pages,
-                                       self.page_size))
+                                       self.page_size)))
         self.block_tab = {
             name: jnp.full((n_slots, self.n_blocks[name]),
                            self.n_pages[name], i32)
@@ -1443,6 +1508,12 @@ class ContinuousBatcher:
         self.pos = jnp.zeros((n_slots,), i32)
         self.remaining = jnp.zeros((n_slots,), i32)
         self.active = jnp.zeros((n_slots,), bool)
+        if self._rep_ns is not None:
+            self.block_tab = jax.device_put(self.block_tab, self._rep_ns)
+            self.last_tok = jax.device_put(self.last_tok, self._rep_ns)
+            self.pos = jax.device_put(self.pos, self._rep_ns)
+            self.remaining = jax.device_put(self.remaining, self._rep_ns)
+            self.active = jax.device_put(self.active, self._rep_ns)
         self._host_pos = [0] * n_slots
         self._host_last_tok = [0] * n_slots
         self._host_remaining = [0] * n_slots

@@ -23,6 +23,7 @@ post-process distributions.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -32,8 +33,93 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig
+from ..distributed import sharding
 from ..models import registry
 from ..models import params as PP
+
+
+# --- mesh-sharded paged serving (tensor parallelism under shard_map) ------------------
+#
+# ``cfg.mesh_shape`` puts the three paged step programs below under
+# ``jax.shard_map`` on a serving mesh (launch.mesh.serving_mesh): model
+# parameters and KV page pools shard over the LAST mesh axis
+# (cfg.tp_axis) per the DEFAULT_RULES logical-axis table, block tables
+# and slot state stay replicated, and the step body runs the unchanged
+# per-shard model with explicit collectives (sharding.psum_parts /
+# gather_parts) at the attention / FF projection boundaries.  The body
+# sees a *shard-local* ModelConfig (heads / kv-heads / ff divided by the
+# tp extent) so every reshape in models.layers is automatically
+# per-shard; the MLA latent pool shards over the lora dim and is
+# detected from the pool shape inside mla_apply_paged.  Token streams
+# stay bit-identical to the 1-device path for float32 configs: the
+# sharded matmuls split only *output* columns (contraction dims are
+# never sharded), psum adds per-shard partials in fixed axis order, and
+# gathers are pure concats.
+
+
+@functools.lru_cache(maxsize=16)
+def _mesh_cache(mesh_shape: Tuple[int, ...], tp_axis: str):
+    from ..launch.mesh import serving_mesh
+    return serving_mesh(mesh_shape, tp_axis)
+
+
+def serving_mesh_for(cfg: ModelConfig):
+    """(mesh, tp_axis) for the sharded paged path; (None, None) when
+    cfg.mesh_shape is empty (the plain single-device path)."""
+    if not cfg.mesh_shape:
+        return None, None
+    sharding.validate_shardable(cfg, int(cfg.mesh_shape[-1]))
+    return _mesh_cache(tuple(cfg.mesh_shape), cfg.tp_axis), cfg.tp_axis
+
+
+def shard_local_cfg(cfg: ModelConfig) -> ModelConfig:
+    """The per-shard view of the model the shard_map body runs: column-
+    sharded dims (query/kv heads, ff) divided by the tp extent so the
+    layer reshapes are shard-local.  MLA keeps the FULL kv_lora_rank
+    (w_dkv / kv_norm stay replicated; only the latent *pool* shards) and
+    vocab_size stays full (the per-shard logits tile is detected against
+    padded_vocab and gathered).  mesh_shape is cleared so the local cfg
+    can never recursively build sharded steps."""
+    t = int(cfg.mesh_shape[-1]) if cfg.mesh_shape else 1
+    kw: Dict[str, Any] = {"mesh_shape": ()}
+    if t > 1:
+        kw["n_heads"] = cfg.n_heads // t
+        kw["d_ff"] = cfg.d_ff // t
+        if cfg.moe_d_ff:
+            kw["moe_d_ff"] = cfg.moe_d_ff // t
+        if not cfg.mla:
+            kw["n_kv_heads"] = cfg.n_kv_heads // t
+    return dataclasses.replace(cfg, **kw)
+
+
+def paged_sharding_specs(cfg: ModelConfig, page_size: int, mesh):
+    """(param_specs, pool_specs) PartitionSpec trees for the sharded
+    paged path, both derived from the same Decl logical axes via the
+    DEFAULT_RULES table — with two serving-specific rule overrides:
+
+    * params: ``experts -> None`` (expert-parallel dispatch is deferred
+      until the mesh work settles — expert ff dims column-shard over
+      'model' instead, matching the dense MLP) and the token-embedding
+      table is forced replicated (its vocab dim is *gathered by token
+      id*, which a row-sharded table cannot serve; the unembed
+      projection stays vocab-column-sharded).
+    * pools: ``lora -> 'model'`` so MLA latent pages shard over the
+      compressed dim (per-layer w_dkv keeps lora -> None from the param
+      pass, staying replicated).  GQA/int8 pools shard over their
+      kv_heads axis straight from the default table; k_rope / scale
+      page axes are untouched.
+    """
+    with sharding.use_rules(experts=None):
+        p_specs = PP.param_specs(registry.decls(cfg), mesh)
+    if "embed" in p_specs:
+        p_specs["embed"] = P()
+    from ..models.cache_layouts import get_layout
+    layout = get_layout(cfg, page_size)
+    pool_decls = registry.paged_cache_decls(
+        cfg, {g.name: 1 for g in layout.groups}, page_size)
+    with sharding.use_rules(lora=("model",)):
+        pool_specs = PP.param_specs(pool_decls, mesh)
+    return p_specs, pool_specs
 
 
 def make_serve_steps(cfg: ModelConfig, batch: int, max_seq: int,
@@ -146,11 +232,39 @@ def make_sampling_serve_steps(cfg: ModelConfig, batch: int, max_seq: int,
 # {"local", "global"} for gemma3, {"latent"} for MLA.
 
 
+def _shard_wrap(cfg: ModelConfig, page_size: int, fn, n_extra_in: int,
+                n_extra_out: int, donate: Tuple[int, ...]):
+    """jit a paged step body, under ``jax.shard_map`` when the cfg names
+    a serving mesh: params + KV pools follow their PartitionSpec trees,
+    every other input/output (block tables, slot vectors, token
+    payloads) is replicated (``P()`` works as a pytree prefix over the
+    per-group dicts).  ``check_vma=False``: the body's outputs are made
+    replicated by explicit psum/gather collectives, which 0.4.x's
+    replication checker cannot see through.  Donation carries over
+    unchanged — donated leaves are resharded in place."""
+    mesh, axis = serving_mesh_for(cfg)
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=donate)
+    p_specs, pool_specs = paged_sharding_specs(cfg, page_size, mesh)
+
+    def body(*args):
+        with sharding.manual_axis(axis):
+            return fn(*args)
+
+    sm = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(p_specs, pool_specs) + (P(),) * n_extra_in,
+        out_specs=(pool_specs,) + (P(),) * n_extra_out,
+        check_vma=False)
+    return jax.jit(sm, donate_argnums=donate)
+
+
 @functools.lru_cache(maxsize=32)
 def make_paged_decode_step(cfg: ModelConfig, max_seq: int, page_size: int):
     """Jitted batched decode over paged KV: advances all slots at once."""
     from ..models.cache_layouts import get_layout
     layout = get_layout(cfg, page_size)
+    fcfg = shard_local_cfg(cfg)
     i32 = jnp.int32
 
     def step_fn(params, pools, block_tab, last_tok, pos, remaining, active):
@@ -162,7 +276,7 @@ def make_paged_decode_step(cfg: ModelConfig, max_seq: int, page_size: int):
                                    n_pages)
         cache = {"pages": pools, "block_tab": bt}
         logits, new_pools = registry.forward(
-            cfg, params, {"tokens": last_tok[:, None]}, mode="decode",
+            fcfg, params, {"tokens": last_tok[:, None]}, mode="decode",
             cache=cache, pos=pos)
         nxt = jnp.argmax(logits[:, -1], -1).astype(i32)
         nxt = jnp.where(active, nxt, last_tok)
@@ -173,7 +287,8 @@ def make_paged_decode_step(cfg: ModelConfig, max_seq: int, page_size: int):
         out = jnp.stack([nxt, finished.astype(i32)])   # (2, n_slots)
         return new_pools, nxt, pos, remaining, active, out
 
-    return jax.jit(step_fn, donate_argnums=(1, 3, 4, 5, 6))
+    return _shard_wrap(cfg, page_size, step_fn, n_extra_in=5,
+                       n_extra_out=5, donate=(1, 3, 4, 5, 6))
 
 
 @functools.lru_cache(maxsize=32)
@@ -205,6 +320,7 @@ def make_spec_verify_step(cfg: ModelConfig, k: int, max_seq: int,
     per-slot commit count, and the finished flags."""
     from ..models.cache_layouts import get_layout
     layout = get_layout(cfg, page_size)
+    fcfg = shard_local_cfg(cfg)
     i32 = jnp.int32
 
     def verify_fn(params, pools, block_tab, tokens, n_draft, pos,
@@ -228,7 +344,7 @@ def make_spec_verify_step(cfg: ModelConfig, k: int, max_seq: int,
             bt[g.name] = jnp.where(active[:, None], tab, n_pages)
         cache = {"pages": pools, "block_tab": bt}
         logits, new_pools = registry.forward(
-            cfg, params, {"tokens": tokens}, mode="verify", cache=cache,
+            fcfg, params, {"tokens": tokens}, mode="verify", cache=cache,
             pos=pos)
         preds = jnp.argmax(logits, -1).astype(i32)          # (n, k)
         # drafts agree while they match the model's own greedy argmax.
@@ -249,7 +365,8 @@ def make_spec_verify_step(cfg: ModelConfig, k: int, max_seq: int,
             [preds.T, commit[None, :], finished.astype(i32)[None, :]])
         return new_pools, last_tok, pos, remaining, active, out
 
-    return jax.jit(verify_fn, donate_argnums=(1, 5, 6, 7))
+    return _shard_wrap(cfg, page_size, verify_fn, n_extra_in=11,
+                       n_extra_out=5, donate=(1, 5, 6, 7))
 
 
 @functools.lru_cache(maxsize=32)
@@ -263,6 +380,7 @@ def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int,
     serves both the cold and the cache-hit path)."""
     from ..models.cache_layouts import get_layout
     layout = get_layout(cfg, page_size)
+    fcfg = shard_local_cfg(cfg)
     i32 = jnp.int32
 
     def chunk_fn(params, pools, block_tab, last_tok, pos, remaining, active,
@@ -273,7 +391,7 @@ def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int,
             block_tab[g.name], slot_idx, 0) for g in layout.groups}
         cache = {"pages": pools, "block_tab": bt_row}
         logits, new_pools = registry.forward(
-            cfg, params, {"tokens": tokens}, mode="chunk", cache=cache,
+            fcfg, params, {"tokens": tokens}, mode="chunk", cache=cache,
             pos=pos0, last_pos=last_in_chunk,
             cache_offset=jnp.broadcast_to(cache_offset, (1,)))
         tok0 = jnp.argmax(logits[0, -1], -1).astype(i32)
@@ -287,7 +405,8 @@ def make_chunk_prefill_step(cfg: ModelConfig, chunk: int, max_seq: int,
         active = active.at[idx].set(alive, mode="drop")
         return new_pools, last_tok, pos, remaining, active, tok0
 
-    return jax.jit(chunk_fn, donate_argnums=(1, 3, 4, 5, 6))
+    return _shard_wrap(cfg, page_size, chunk_fn, n_extra_in=13,
+                       n_extra_out=5, donate=(1, 3, 4, 5, 6))
 
 
 def greedy_generate(cfg: ModelConfig, params, prompt_batch: Dict,

@@ -22,3 +22,13 @@ def check(code: str, n_devices: int = 8, timeout: int = 420) -> str:
     r = run_with_devices(code, n_devices, timeout)
     assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
     return r.stdout
+
+
+def check_mesh(code: str, mesh_shape, timeout: int = 420) -> str:
+    """Run ``code`` with exactly enough host devices for ``mesh_shape``
+    (the sharded-serving tests' 2/4/8-way meshes): device count =
+    prod(shape), so a (2, 2) data x model mesh gets 4 devices."""
+    need = 1
+    for d in mesh_shape:
+        need *= int(d)
+    return check(code, n_devices=need, timeout=timeout)

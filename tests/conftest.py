@@ -7,6 +7,16 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: the test re-execs its body in a subprocess with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N (2/4/8-way "
+        "simulated meshes; see tests/_subproc.py) — the parent process "
+        "stays at 1 device, so these can be deselected with "
+        "-m 'not multidevice' for a fast pass")
+
+
 # --- optional-hypothesis shim --------------------------------------------------
 #
 # Several test modules use property-based tests via ``hypothesis``.  The
