@@ -35,8 +35,60 @@ python -m pytest -x -q
 # tp=1 shard_map wrapper must stay within 0.95x of the unsharded
 # batcher (paired-median ratio), and the 2-way mesh arm (subprocess
 # with 2 simulated host devices) must reproduce the 1-device token
-# streams exactly while halving per-shard KV pool bytes.
+# streams exactly while halving per-shard KV pool bytes — or if
+# telemetry stops being near-free (telemetry_overhead): decode
+# throughput with lifecycle tracing + the metrics registry enabled must
+# stay >= 0.97x (0.85x in smoke) of the bare batcher on paired medians,
+# with the trace's token events matching the streamed tokens exactly.
 python -m benchmarks.run --smoke --serve
+
+# Metrics-endpoint smoke (serve.telemetry): serve a couple of requests
+# through a fully instrumented paged batcher, scrape the live
+# /metrics HTTP endpoint the way Prometheus would, and validate the
+# exposition — TYPE lines before samples, cumulative histogram buckets,
+# +Inf bucket == _count — plus the presence of the core serving series.
+python - <<'PY'
+import dataclasses, threading, urllib.request
+import numpy as np
+from repro import configs
+from repro.configs.base import smoke_variant
+from repro.models import registry
+from repro.serve.batching import ContinuousBatcher, Request, drain
+from repro.serve.telemetry import (MetricsServer, ServeTelemetry,
+                                   validate_exposition)
+
+cfg = smoke_variant(configs.get("minitron-4b"))
+pcfg = dataclasses.replace(cfg, kv_page_size=8, prefill_chunk=8)
+tel = ServeTelemetry()
+bat = ContinuousBatcher(pcfg, registry.init(cfg, 0), n_slots=2,
+                        max_seq=64, telemetry=tel)
+rng = np.random.default_rng(3)
+reqs = [Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 10).astype(np.int32), max_new=8)
+        for i in range(2)]
+prod = threading.Thread(target=lambda: [bat.submit(r) for r in reqs])
+prod.start()
+bat.run(len(reqs))
+prod.join()
+assert all(len(drain(r)) == 8 for r in reqs)
+
+srv = MetricsServer(tel, port=0).start()
+try:
+    with urllib.request.urlopen(srv.url, timeout=10) as rsp:
+        assert rsp.status == 200, rsp.status
+        ctype = rsp.headers["Content-Type"]
+        assert ctype.startswith("text/plain; version=0.0.4"), ctype
+        text = rsp.read().decode("utf-8")
+finally:
+    srv.stop()
+validate_exposition(text)
+for series in ("serve_ttft_seconds_bucket", "serve_decode_step_seconds",
+               "serve_requests_submitted_total", "serve_steps_total",
+               "serve_retired_total", "serve_pool_pages",
+               "serve_queue_depth"):
+    assert series in text, f"missing series: {series}"
+print(f"metrics endpoint smoke OK ({len(text.splitlines())} lines)")
+PY
 
 # Chaos smoke (serve.resilience): the deterministic fault-injection
 # matrix — failed tier transfers, corrupted/truncated snapshots,

@@ -18,24 +18,30 @@ from __future__ import annotations
 import math
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 
 class Heartbeat:
     """Liveness registry.  Workers call ``beat(worker)``; the monitor
-    thread marks workers dead after ``timeout`` seconds of silence."""
+    thread marks workers dead after ``timeout`` seconds of silence.
 
-    def __init__(self, workers: Sequence[str], timeout: float = 10.0):
+    ``clock`` is injectable (defaults to wall time) so supervisors
+    under a fake clock — serving telemetry tests — get deterministic
+    stall detection."""
+
+    def __init__(self, workers: Sequence[str], timeout: float = 10.0,
+                 clock: Optional[Callable[[], float]] = None):
         self.timeout = timeout
-        self._last: Dict[str, float] = {w: time.monotonic() for w in workers}
+        self.clock = clock or time.monotonic
+        self._last: Dict[str, float] = {w: self.clock() for w in workers}
         self._lock = threading.Lock()
 
     def beat(self, worker: str) -> None:
         with self._lock:
-            self._last[worker] = time.monotonic()
+            self._last[worker] = self.clock()
 
     def dead(self, now: Optional[float] = None) -> List[str]:
-        now = now if now is not None else time.monotonic()
+        now = now if now is not None else self.clock()
         with self._lock:
             return [w for w, t in self._last.items()
                     if now - t > self.timeout]

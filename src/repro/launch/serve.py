@@ -15,6 +15,7 @@ from ..core.dataflow import DataflowContext
 from ..models import registry
 from ..serve.batching import ContinuousBatcher, Request, drain
 from ..serve.resilience import RequestFailed, ServeSupervisor
+from ..serve.telemetry import MetricsServer, ServeTelemetry
 
 
 def main(argv=None):
@@ -85,6 +86,18 @@ def main(argv=None):
     ap.add_argument("--klass", choices=("latency", "standard", "batch"),
                     default="standard",
                     help="SLA class stamped on every generated request")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus text exposition on "
+                         "http://127.0.0.1:PORT/metrics (0 = ephemeral "
+                         "port, printed at startup; -1 = off)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the request-lifecycle trace here at "
+                         "exit: .json => Chrome chrome://tracing "
+                         "format, anything else => JSONL events")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the jitted serve steps in jax.profiler "
+                         "TraceAnnotation/StepTraceAnnotation so device "
+                         "profiles line up with the host trace spans")
     ap.add_argument("--mesh", default="",
                     help="device mesh shape, e.g. '2' (2-way tensor "
                          "parallel) or '1x2' (data x model); the last "
@@ -145,13 +158,23 @@ def main(argv=None):
     params = registry.init(cfg, args.seed)
     rng = np.random.default_rng(args.seed)
 
+    telemetry = None
+    metrics_server = None
+    if args.metrics_port >= 0 or args.trace_out or args.profile:
+        telemetry = ServeTelemetry(trace=bool(args.trace_out),
+                                   profile=args.profile)
     batcher = ContinuousBatcher(cfg, params, n_slots=args.slots,
                                 max_seq=args.max_seq,
                                 n_pages=args.pages or None,
                                 schedule=args.schedule,
                                 overload=args.overload,
                                 queue_depth=args.queue_depth or None,
-                                faults=args.faults or None)
+                                faults=args.faults or None,
+                                telemetry=telemetry)
+    if args.metrics_port >= 0:
+        metrics_server = MetricsServer(telemetry,
+                                       port=args.metrics_port).start()
+        print(f"metrics: {metrics_server.url}")
     supervisor = ServeSupervisor(batcher) if args.supervise else None
     if batcher.mesh is not None:
         m = batcher.stats()["mesh"]
@@ -265,6 +288,25 @@ def main(argv=None):
           f"({total_tokens/dt:.1f} tok/s, {batcher.steps} decode steps, "
           f"{mode}, "
           f"slot-util {total_tokens/max(batcher.steps,1)/args.slots:.2f})")
+    if telemetry is not None:
+        lat = telemetry.latency_summary()
+        ttft, gap = lat["ttft"], lat["inter_token"]
+        if ttft["count"]:
+            print(f"latency: ttft p50 {ttft['p50']*1e3:.1f}ms / "
+                  f"p99 {ttft['p99']*1e3:.1f}ms, inter-token p50 "
+                  f"{gap['p50']*1e3:.1f}ms / p99 {gap['p99']*1e3:.1f}ms "
+                  f"(bucket-derived, n={int(ttft['count'])})")
+        if args.trace_out:
+            if args.trace_out.endswith(".json"):
+                n = telemetry.tracer.write_chrome(args.trace_out)
+                kind = "chrome trace"
+            else:
+                n = telemetry.tracer.write_jsonl(args.trace_out)
+                kind = "JSONL trace"
+            print(f"trace: {n} events -> {args.trace_out} ({kind}; "
+                  f"{telemetry.tracer.dropped} dropped)")
+    if metrics_server is not None:
+        metrics_server.stop()
 
 
 if __name__ == "__main__":

@@ -24,4 +24,5 @@ leaves the pipeline — applied to inference:
   routed via ``ModelConfig.decode_flash``.
 """
 
-from . import serve_loop, batching, kv_tiers, prefix_cache, resilience
+from . import (serve_loop, batching, kv_tiers, prefix_cache, resilience,
+               telemetry)

@@ -165,6 +165,7 @@ from .kv_tiers import KVTierManager, SnapshotCorruptError, StagedTransferEngine
 from .prefix_cache import PageAllocator, PrefixIndex
 from .resilience import (BatcherFault, FaultPlan, InjectedFault, StallFault,
                          TerminalEvent, class_rank)
+from .telemetry import ServeTelemetry, _NULLCTX
 from .serve_loop import (make_chunk_prefill_step, make_paged_decode_step,
                          make_spec_verify_step, paged_sharding_specs,
                          serving_mesh_for)
@@ -359,6 +360,7 @@ class ContinuousBatcher:
                  queue_depth: Optional[int] = None,
                  faults=None,
                  clock: Optional[Callable[[], float]] = None,
+                 telemetry: Optional[ServeTelemetry] = None,
                  transfer_retries: int = 2,
                  tier_fault_limit: int = 3):
         if cfg.family in ("vlm", "audio"):
@@ -379,7 +381,22 @@ class ContinuousBatcher:
                              f"{self.overload!r}")
         qd = int(cfg.serve_queue_depth if queue_depth is None
                  else queue_depth)
-        self._clock = clock or time.monotonic
+        # One time base for scheduling AND telemetry: an explicit
+        # ``clock`` wins; otherwise adopt the telemetry object's clock
+        # (so a fake-clocked ServeTelemetry makes the whole batcher
+        # deterministic); otherwise wall time.  The telemetry object is
+        # then re-bound to whatever we chose — every trace stamp and
+        # every deadline computation shares it.
+        if clock is not None:
+            self._clock = clock
+        elif telemetry is not None:
+            self._clock = telemetry.clock
+        else:
+            self._clock = time.monotonic
+        self._telemetry = telemetry
+        if telemetry is not None:
+            telemetry.bind_clock(self._clock)
+            telemetry.add_collector(self._sync_telemetry)
         self.requests: Stream = Stream(depth=qd or 2 * n_slots,
                                        name="requests")
         # lifecycle counters (stats()); ``rejections`` is keyed by the
@@ -509,7 +526,9 @@ class ContinuousBatcher:
             # with a byte budget AND the prefix cache (demotion is keyed
             # by the prefix index's token paths).
             self._xfer = StagedTransferEngine(self.layout,
-                                              faults=self._fault)
+                                              faults=self._fault,
+                                              clock=self._clock,
+                                              telemetry=telemetry)
             self.tier_restore_min = int(
                 cfg.tier_restore_min_tokens if tier_restore_min is None
                 else tier_restore_min)
@@ -628,6 +647,8 @@ class ContinuousBatcher:
         if r is not None:
             if r.submitted_at == 0.0:      # direct Push (bypassed submit)
                 r.submitted_at = self._clock()
+                if self._telemetry:
+                    self._telemetry.note_submit(r)
             if r.deadline_ms is not None:
                 self._deadlines_live = True
         return r
@@ -652,6 +673,8 @@ class ContinuousBatcher:
             self.errored += 1
         else:
             self.cancelled += 1
+        if self._telemetry:
+            self._telemetry.note_terminal(r.rid, event.kind, event.reason)
 
     def _reject(self, r: Request, reason: str = "unservable") -> None:
         """Unservable request (bypassed submit() validation, or needs
@@ -696,6 +719,10 @@ class ContinuousBatcher:
             "expired": self.expired, "errored": self.errored,
             "cancelled": self.cancelled,
         }
+        if self._telemetry:
+            # bucket-derived p50/p90/p99 per latency histogram — the
+            # registry is the source of truth; stats() is a view.
+            s["latency"] = self._telemetry.latency_summary()
         if not self.paged:
             return s
         s["tier_faults"] = self.tier_faults
@@ -738,6 +765,13 @@ class ContinuousBatcher:
         # discarded by block-table rollback.
         s["speculation"] = {
             "k": self.speculate_k,
+            # canonical names (what the Prometheus surface exports);
+            # the old bare names ride along as aliases for one release
+            # — mapping table in docs/serving.md "Observability".
+            "tokens_drafted": self.spec_drafted,
+            "tokens_accepted": self.spec_accepted,
+            "tokens_rolled_back": self.spec_rolled_back,
+            "verify_rounds": self.spec_verify_steps,
             "drafted": self.spec_drafted,
             "accepted": self.spec_accepted,
             "rolled_back": self.spec_rolled_back,
@@ -759,6 +793,95 @@ class ContinuousBatcher:
             s["cached_prefixes"] = self._prefix.n_nodes
             s["cached_prefix_pages"] = self._prefix.n_pages
         return s
+
+    def _sync_telemetry(self) -> None:
+        """Collector: mirror the plain-attribute lifetime counters into
+        the telemetry registry.  Runs on every registry read (scrape /
+        snapshot), not per event — hot paths keep bumping cheap python
+        ints and this reconciles them, so enabling metrics adds no
+        per-token dict lookups."""
+        tel = self._telemetry
+        if tel is None:
+            return
+        m = tel.metrics
+        c, g = m.counter, m.gauge
+        c("serve_steps_total", "batched decode jit calls").set(self.steps)
+        c("serve_retired_total", "requests fully finished (any outcome)"
+          ).set(self.retired)
+        c("serve_prefill_chunks_total", "chunked-prefill jit calls"
+          ).set(self.prefill_chunks)
+        c("serve_preemptions_total", "slots preempted").set(
+            self.preemptions)
+        c("serve_resumes_total", "preempted slots resumed").set(
+            self.resumes)
+        c("serve_expired_total", "requests expired past deadline"
+          ).set(self.expired)
+        c("serve_errored_total", "requests failed with an error").set(
+            self.errored)
+        c("serve_cancelled_total", "requests cancelled").set(
+            self.cancelled)
+        for reason, n in self.rejections.items():
+            c("serve_rejections_total", "requests rejected, by reason",
+              labels={"reason": reason}).set(n)
+        g("serve_queue_depth", "requests waiting in the admission queue"
+          ).set(len(self._pending) + self.requests.Size())
+        g("serve_slots_live", "slots with an active request").set(
+            sum(1 for r in self._slot_req if r is not None))
+        if not self.paged:
+            return
+        c("serve_restarts_total", "supervised crash recoveries").set(
+            self.restarts)
+        c("serve_tier_faults_total", "injected/real tier-transfer faults"
+          ).set(self.tier_faults)
+        g("serve_peak_pages", "high-water mark of used pages").set(
+            self.peak_pages)
+        for name, a in self._alloc.items():
+            g("serve_pool_pages", "page-pool occupancy by group/state",
+              labels={"group": name, "state": "free"}).set(a.free_pages)
+            g("serve_pool_pages", "page-pool occupancy by group/state",
+              labels={"group": name, "state": "used"}).set(a.used_pages)
+            g("serve_pool_pages", "page-pool occupancy by group/state",
+              labels={"group": name, "state": "shared"}
+              ).set(a.shared_pages)
+        c("serve_spec_tokens_drafted_total", "speculative tokens drafted"
+          ).set(self.spec_drafted)
+        c("serve_spec_tokens_accepted_total",
+          "speculative tokens accepted (decode steps saved)").set(
+            self.spec_accepted)
+        c("serve_spec_tokens_rolled_back_total",
+          "speculative tokens rolled back").set(self.spec_rolled_back)
+        c("serve_spec_verify_rounds_total", "speculative verify rounds"
+          ).set(self.spec_verify_steps)
+        c("serve_transfer_gathers_total", "staged D2H gathers").set(
+            self._xfer.gathers)
+        c("serve_transfer_scatters_total", "staged H2D scatters").set(
+            self._xfer.scatters)
+        c("serve_transfer_d2h_bytes_total", "bytes spilled to host").set(
+            self._xfer.d2h_bytes)
+        c("serve_transfer_h2d_bytes_total", "bytes restored to device"
+          ).set(self._xfer.h2d_bytes)
+        if self.prefix_cache:
+            c("serve_prefix_lookups_total", "prefix-cache lookups").set(
+                self.prefix_lookups)
+            c("serve_prefix_hits_total", "prefix-cache hits").set(
+                self.prefix_hits)
+            c("serve_prefix_hit_tokens_total",
+              "prompt tokens served from cached prefixes").set(
+                self.prefix_hit_tokens)
+            c("serve_cow_copies_total", "copy-on-write page copies").set(
+                self.cow_copies)
+            c("serve_prefix_evictions_total", "prefix nodes evicted"
+              ).set(self.prefix_evictions)
+        if self._tiers is not None:
+            t = self._tiers
+            g("serve_t1_bytes", "host-tier resident bytes").set(
+                t.store.nbytes)
+            c("serve_t1_demotions_total", "prefix blocks demoted to T1"
+              ).set(t.demotions)
+            c("serve_t1_rehits_total", "T1 promote-back hits").set(
+                t.rehits)
+            c("serve_t1_recomputes_total",
+              "tier misses recomputed from tokens").set(t.recomputes)
 
     # -- paged admission (chunked prefill) --------------------------------------------
 
@@ -1044,10 +1167,15 @@ class ContinuousBatcher:
             self._admit_seq += 1
         else:                  # keep the original admission order (victim
             self._slot_seq[slot] = resume.seq      # tie-breaks stay stable)
+        n_chunks = max(1, _ceil_div(plen - start, self.chunk))
         self._admitting.append(_Admission(
             req=r, slot=slot, plen=plen, next_chunk=0,
-            n_chunks=max(1, _ceil_div(plen - start, self.chunk)),
+            n_chunks=n_chunks,
             start=start, cache_offset=m, resume=resume))
+        if self._telemetry:
+            self._telemetry.note_admit(
+                r, slot, prefix_hit_tokens=m, cow=cow, start=start,
+                n_chunks=n_chunks, resume=resume is not None)
         return True
 
     def _prefill_step(self) -> None:
@@ -1100,21 +1228,29 @@ class ContinuousBatcher:
         # lockstep by decode, re-established by both resume modes), so
         # installing max_new - 1 again leaves exactly (replay steps +
         # parked remaining) on the device counter.
+        tel = self._telemetry
+        t0 = tel.clock() if tel else 0.0
         try:
-            (self.pools, self.last_tok, self.pos, self.remaining,
-             self.active, tok0) = fn(
-                self.params, self.pools, self.block_tab, self.last_tok,
-                self.pos, self.remaining, self.active, jnp.asarray(seg),
-                jnp.full((1,), base, jnp.int32),
-                jnp.full((1,), last_in_chunk, jnp.int32),
-                jnp.int32(a.slot), jnp.asarray(final),
-                jnp.int32(a.plen), jnp.int32(a.req.max_new),
-                jnp.int32(a.cache_offset))
+            with (tel.annotate("serve.prefill_chunk",
+                               step=self.prefill_chunks)
+                  if tel else _NULLCTX):
+                (self.pools, self.last_tok, self.pos, self.remaining,
+                 self.active, tok0) = fn(
+                    self.params, self.pools, self.block_tab, self.last_tok,
+                    self.pos, self.remaining, self.active, jnp.asarray(seg),
+                    jnp.full((1,), base, jnp.int32),
+                    jnp.full((1,), last_in_chunk, jnp.int32),
+                    jnp.int32(a.slot), jnp.asarray(final),
+                    jnp.int32(a.plen), jnp.int32(a.req.max_new),
+                    jnp.int32(a.cache_offset))
         except Exception as e:
             # a genuine failure inside the jitted prefill may have
             # consumed the donated pools — fatal; the supervisor owns
             # the rebuild.
             raise BatcherFault(e) from e
+        if tel:
+            tel.note_chunk(a.req.rid, a.slot, c, t0, tel.clock(),
+                           base=base, final=final)
         self.prefill_chunks += 1
         a.next_chunk += 1
         if final:
@@ -1139,8 +1275,13 @@ class ContinuousBatcher:
                 self._replay_skip[a.slot] = replay + a.resume.skip
                 self.resumes += 1
                 self.recompute_resumes += 1
+                if tel:
+                    tel.note_resume(a.req.rid, a.slot, "recompute")
                 return
             a.req.out.Push(int(tok0))
+            if tel:
+                tel.note_first_token(a.req.rid, a.slot, tel.clock(),
+                                     pos=a.plen)
             if a.req.max_new > 1 and a.plen < self.max_seq - 1:
                 self._slot_req[a.slot] = a.req
                 self._host_pos[a.slot] = a.plen
@@ -1150,6 +1291,8 @@ class ContinuousBatcher:
                 a.req.out.close()
                 self.retired += 1
                 self._release_slot(a.slot, prompt=a.req.prompt)
+                if tel:
+                    tel.note_retire(a.req.rid, a.slot)
 
     def _release_slot(self, slot: int,
                       prompt: Optional[np.ndarray] = None,
@@ -1235,6 +1378,8 @@ class ContinuousBatcher:
                 shared[g.name] = pages[:ns]
                 priv_by_group[g.name] = pages[ns:]
                 counts[g.name] = len(pages) - ns
+            tel = self._telemetry
+            t0 = tel.clock() if tel else 0.0
             ok, gathered = self._tier_op(
                 "spill", lambda: self._xfer.gather_host(self.pools,
                                                         priv_by_group))
@@ -1253,6 +1398,9 @@ class ContinuousBatcher:
                 self._release_slot(slot, keep_shared=True)
                 self.preemptions += 1
                 self.preempted_rids.append(r.rid)
+                if tel:
+                    tel.note_spill(r.rid, t0, tel.clock())
+                    tel.note_preempt(r.rid, slot, pos, "spill")
                 return
             # spill failed (rung 2): park as a recompute record instead —
             # greedy replay is deterministic, so the resumed output is
@@ -1268,6 +1416,8 @@ class ContinuousBatcher:
         self._release_slot(slot, prompt=r.prompt)
         self.preemptions += 1
         self.preempted_rids.append(r.rid)
+        if self._telemetry:
+            self._telemetry.note_preempt(r.rid, slot, pos, "recompute")
 
     def _grow_slot(self, slot: int) -> bool:
         """Ensure every group holds a WRITABLE page for the slot's next
@@ -1386,6 +1536,8 @@ class ContinuousBatcher:
                     self._alloc[name].free(pgs)
                 break
             self._preempted.pop(idx)
+            tel = self._telemetry
+            t0 = tel.clock() if tel else 0.0
             ok, pools = self._tier_op(
                 "restore", lambda: self._xfer.scatter_device(
                     self.pools,
@@ -1437,6 +1589,9 @@ class ContinuousBatcher:
             self._ng_done[slot] = 0
             self.resumes += 1
             resumed += 1
+            if tel:
+                tel.note_restore(rec.req.rid, t0, tel.clock())
+                tel.note_resume(rec.req.rid, slot, "restore")
         return resumed
 
     # -- fatal faults: shutdown vs crash recovery --------------------------------------
@@ -1574,6 +1729,15 @@ class ContinuousBatcher:
         self._pending.extendleft(reversed(fresh))
         self.restarts += 1
         self._stalled = False
+        if self._telemetry:
+            # same rid as the pre-fault events: the replayed request's
+            # trace stitches to its original across the restart.
+            for rec in journal:
+                self._telemetry.note_recover_journal(
+                    rec.req.rid, rec.pos, "recompute", self.restarts)
+            for r in fresh:
+                self._telemetry.event(r.rid, "recover_requeue",
+                                      restart=self.restarts)
         return len(journal) + len(fresh)
 
     # -- T2 snapshots -------------------------------------------------------------------
@@ -1659,11 +1823,17 @@ class ContinuousBatcher:
             tok0 = np.asarray(tok0)           # (n_slots,) int32
             for row, (slot, r) in enumerate(grp):
                 r.out.Push(int(tok0[row]))
+                tel = self._telemetry
+                if tel:
+                    tel.note_first_token(r.rid, slot, tel.clock(),
+                                         pos=len(r.prompt))
                 if r.max_new > 1 and len(r.prompt) < self.max_seq - 1:
                     self._slot_req[slot] = r
                 else:                          # retired at admission
                     r.out.close()
                     self.retired += 1
+                    if tel:
+                        tel.note_retire(r.rid, slot)
 
     # -- scheduling ---------------------------------------------------------------
 
@@ -1705,6 +1875,8 @@ class ContinuousBatcher:
                 req.rid, f"invalid: {reason}"))
             raise ValueError(f"request {req.rid}: {reason}")
         req.submitted_at = self._clock()
+        if self._telemetry:
+            self._telemetry.note_submit(req)
         if req.deadline_ms is not None:
             self._deadlines_live = True
         if self.overload == "reject":
@@ -1728,6 +1900,8 @@ class ContinuousBatcher:
                 break
             if r.submitted_at == 0.0:
                 r.submitted_at = self._clock()
+                if self._telemetry:
+                    self._telemetry.note_submit(r)
             if r.deadline_ms is not None:
                 self._deadlines_live = True
             self._pending.append(r)
@@ -2094,22 +2268,30 @@ class ContinuousBatcher:
             tokens[i, 1:1 + len(d)] = d
             tokens[i, 1 + len(d):] = tokens[i, len(d)]   # pad (masked)
             n_draft[i] = len(d)
+        tel = self._telemetry
+        tel_t0 = tel.clock() if tel else 0.0
         t0 = time.monotonic()
         try:
             # injected verify fault fires AFTER scratch setup — the
             # unwind below must leave the allocator consistent.
             self._fault.check("verify")
             copy_src, copy_dst, rows, cols, vals = xfer
-            (self.pools, self.last_tok, self.pos, self.remaining,
-             self.active, out) = self._verify(
-                self.params, self.pools, self.block_tab,
-                jnp.asarray(tokens), jnp.asarray(n_draft),
-                self.pos, self.remaining, self.active,
-                copy_src, copy_dst, rows, cols, vals)
+            with (tel.annotate("serve.verify") if tel else _NULLCTX):
+                (self.pools, self.last_tok, self.pos, self.remaining,
+                 self.active, out) = self._verify(
+                    self.params, self.pools, self.block_tab,
+                    jnp.asarray(tokens), jnp.asarray(n_draft),
+                    self.pos, self.remaining, self.active,
+                    copy_src, copy_dst, rows, cols, vals)
         except Exception as e:
             self._spec_unwind(swaps)
             raise BatcherFault(e) from e
         dt = time.monotonic() - t0
+        t_round = 0.0
+        if tel:
+            t_round = tel.clock()
+            tel.note_verify_round(tel_t0, t_round,
+                                  n_drafting=int((n_draft > 0).sum()))
         out = np.asarray(out)                  # the ONLY per-step transfer
         preds, commit, finished = out[:k], out[k], out[k + 1]
         self._spec_resolve(swaps, commit)
@@ -2125,6 +2307,11 @@ class ContinuousBatcher:
                     self._replay_skip[i] -= 1
                 else:
                     r.out.Push(tok)
+                    if tel:
+                        # every committed token of the round shares its
+                        # end stamp: they genuinely arrive together.
+                        tel.note_token(r.rid, i, t_round,
+                                       pos=self._host_pos[i] + t)
                 self._history[i].append(tok)
             self._host_last_tok[i] = int(preds[c - 1, i])
             self._host_pos[i] += c
@@ -2133,6 +2320,8 @@ class ContinuousBatcher:
             nd = int(n_draft[i])
             if nd:
                 acc = c - 1
+                if tel:
+                    tel.note_spec(r.rid, i, nd, acc)
                 self.spec_drafted += nd
                 self.spec_accepted += acc
                 self.spec_rolled_back += nd - acc
@@ -2172,6 +2361,8 @@ class ContinuousBatcher:
                 self._slot_req[i] = None
                 self._release_slot(i, prompt=r.prompt)
                 done += 1
+                if tel:
+                    tel.note_retire(r.rid, i)
         self.spec_verify_steps += 1
         self.steps += 1
         self.retired += done
@@ -2206,22 +2397,31 @@ class ContinuousBatcher:
                 if drafts:       # setup may prune drafts (dry pool)
                     return self._spec_step(drafts, swaps, xfer)
         n_live = sum(1 for r in self._slot_req if r is not None)
+        tel = self._telemetry
+        tel_t0 = tel.clock() if tel else 0.0
         t0 = time.monotonic()
         try:
             self._fault.check("step")
-            if self.paged:
-                (self.pools, self.last_tok, self.pos, self.remaining,
-                 self.active, out) = self._step(
-                    self.params, self.pools, self.block_tab, self.last_tok,
-                    self.pos, self.remaining, self.active)
-            else:
-                (self.cache, self.last_tok, self.pos, self.remaining,
-                 self.active, out) = self._step(
-                    self.params, self.cache, self.last_tok, self.pos,
-                    self.remaining, self.active)
+            with (tel.annotate("serve.decode_step", step=self.steps)
+                  if tel else _NULLCTX):
+                if self.paged:
+                    (self.pools, self.last_tok, self.pos, self.remaining,
+                     self.active, out) = self._step(
+                        self.params, self.pools, self.block_tab,
+                        self.last_tok, self.pos, self.remaining,
+                        self.active)
+                else:
+                    (self.cache, self.last_tok, self.pos, self.remaining,
+                     self.active, out) = self._step(
+                        self.params, self.cache, self.last_tok, self.pos,
+                        self.remaining, self.active)
         except Exception as e:
             raise BatcherFault(e) from e
         self._note_rate(time.monotonic() - t0, n_live)
+        t_step = 0.0
+        if tel:
+            t_step = tel.clock()
+            tel.note_decode_step(tel_t0, t_step, n_live)
         out = np.asarray(out)                  # the ONLY per-step transfer
         toks, finished = out[0], out[1]
         done = 0
@@ -2235,6 +2435,10 @@ class ContinuousBatcher:
                 self._replay_skip[i] -= 1
             else:
                 r.out.Push(int(toks[i]))
+                if tel:
+                    tel.note_token(
+                        r.rid, i, t_step,
+                        pos=self._host_pos[i] if self.paged else -1)
             if self.paged:
                 self._host_last_tok[i] = int(toks[i])
                 self._host_pos[i] += 1
@@ -2250,6 +2454,8 @@ class ContinuousBatcher:
                     # identical prefix skips its prefill.
                     self._release_slot(i, prompt=r.prompt)
                 done += 1
+                if tel:
+                    tel.note_retire(r.rid, i)
         self.steps += 1
         self.retired += done
         return done

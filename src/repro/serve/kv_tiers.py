@@ -55,7 +55,8 @@ from __future__ import annotations
 import hashlib
 import os
 import pickle
-from typing import Any, Dict, List, Optional, Sequence
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -117,15 +118,27 @@ class StagedTransferEngine:
     One engine per batcher serves every transfer consumer — preemption
     spill/resume, prefix demote to T1, T1 promote back to device — so
     the transfer counters in ``stats()`` describe all tier traffic.
+
+    ``clock`` is the batcher's injectable time base (deterministic
+    under a fake clock in tests); every staged call is timed with it,
+    accumulated into ``gather_seconds``/``scatter_seconds`` and — when
+    a ``ServeTelemetry`` is attached — observed into the
+    ``serve_transfer_{gather,scatter}_seconds`` histograms.
     """
 
-    def __init__(self, layout, faults: Optional[FaultPlan] = None):
+    def __init__(self, layout, faults: Optional[FaultPlan] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 telemetry=None):
         self.layout = layout
         self.faults = faults or FaultPlan()
+        self._clock = clock or time.monotonic
+        self._telemetry = telemetry
         self.gathers = 0             # staged spill/demote calls
         self.scatters = 0            # staged restore/promote calls
         self.d2h_bytes = 0
         self.h2d_bytes = 0
+        self.gather_s = 0.0          # cumulative wall time (clock units)
+        self.scatter_s = 0.0
 
     def gather_host(self, pools, pages_by_group: Dict[str, Sequence[int]]
                     ) -> Dict[str, Any]:
@@ -140,12 +153,17 @@ class StagedTransferEngine:
         if not any(pages_by_group.values()):
             return {}                   # nothing to move: not a transfer
         self.faults.check("t1_d2h")
+        t0 = self._clock()
         dev = {name: self.layout.gather_pages(pools, name, pages)
                for name, pages in pages_by_group.items() if pages}
         out = {name: jax.tree.map(np.asarray, tree)
                for name, tree in dev.items()}
+        dt = self._clock() - t0
         self.gathers += 1
         self.d2h_bytes += sum(_tree_nbytes(t) for t in out.values())
+        self.gather_s += dt
+        if self._telemetry:
+            self._telemetry.h_gather.observe(dt)
         return out
 
     def scatter_device(self, pools, data_by_group: Dict[str, Any],
@@ -158,6 +176,7 @@ class StagedTransferEngine:
         if not any(pages_by_group.get(name) for name in data_by_group):
             return pools                # nothing to move: not a transfer
         self.faults.check("t1_h2d")
+        t0 = self._clock()
         staged = {name: jax.tree.map(jnp.asarray, data_by_group[name])
                   for name in data_by_group
                   if pages_by_group.get(name)}
@@ -165,14 +184,24 @@ class StagedTransferEngine:
             pools = self.layout.restore_pages(pools, name, tree,
                                               pages_by_group[name])
             self.h2d_bytes += _tree_nbytes(tree)
+        dt = self._clock() - t0
         self.scatters += 1
+        self.scatter_s += dt
+        if self._telemetry:
+            self._telemetry.h_scatter.observe(dt)
         return pools
 
-    def stats(self) -> Dict[str, int]:
-        return {"staged_gathers": self.gathers,
-                "staged_scatters": self.scatters,
+    def stats(self) -> Dict[str, Any]:
+        # canonical names first; ``staged_*`` kept one release as
+        # aliases (see the counter-name mapping in docs/serving.md).
+        return {"gathers": self.gathers,
+                "scatters": self.scatters,
                 "d2h_bytes": self.d2h_bytes,
-                "h2d_bytes": self.h2d_bytes}
+                "h2d_bytes": self.h2d_bytes,
+                "gather_seconds": self.gather_s,
+                "scatter_seconds": self.scatter_s,
+                "staged_gathers": self.gathers,
+                "staged_scatters": self.scatters}
 
 
 class _T1Entry:

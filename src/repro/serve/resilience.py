@@ -55,6 +55,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core.health import Heartbeat
+from .telemetry import ENGINE_RID
 
 # SLA class -> scheduling/preemption rank (higher = served first,
 # preempted last).  Unknown classes rank as "standard".
@@ -298,10 +299,17 @@ class ServeSupervisor:
     flight (typed events, so no consumer hangs) and re-raises."""
 
     def __init__(self, batcher, *, max_restarts: int = 2,
-                 heartbeat_timeout: float = 30.0):
+                 heartbeat_timeout: float = 30.0, clock=None):
         self.batcher = batcher
         self.max_restarts = max_restarts
-        self.heartbeat = Heartbeat(["batcher"], timeout=heartbeat_timeout)
+        # The watchdog's clock stays wall time unless injected: a
+        # fake-clocked BATCHER under a real supervisor must not trip
+        # the stall detector just because its fake clock never
+        # advances between beats (or advances by hours).  Telemetry
+        # tests that want deterministic stall timing inject one here.
+        self._clock = clock or time.monotonic
+        self.heartbeat = Heartbeat(["batcher"], timeout=heartbeat_timeout,
+                                   clock=self._clock)
         self.report = ServeReport()
         batcher._heartbeat = self.heartbeat
         batcher._supervised = True
@@ -324,6 +332,12 @@ class ServeSupervisor:
                     return self.report
                 except BatcherFault as e:
                     self.report.faults += 1
+                    tel = getattr(self.batcher, "_telemetry", None)
+                    if tel:
+                        tel.event(ENGINE_RID, "supervisor_fault",
+                                  cause=f"{type(e.cause).__name__}: "
+                                        f"{e.cause}",
+                                  fault=self.report.faults)
                     if (self.report.restarts >= self.max_restarts
                             or not self.batcher.paged):
                         # out of recovery budget (or the dense path,
@@ -335,6 +349,9 @@ class ServeSupervisor:
                     self.heartbeat.beat("batcher")   # recovery takes time
                     self.report.recovered_requests += self.batcher.recover()
                     self.report.restarts += 1
+                    if tel:
+                        tel.event(ENGINE_RID, "supervisor_restart",
+                                  restart=self.report.restarts)
         finally:
             stop.set()
             watchdog.join()
